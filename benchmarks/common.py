@@ -1,0 +1,68 @@
+"""Shared benchmark infrastructure: trained-model cache + timing helper.
+
+Benchmark scale is controlled by REPRO_FULL=1 (paper-scale: full splits,
+100 epochs, 5 seeds) vs the default quick mode (3000 train windows, 80
+epochs, 2 seeds) so `python -m benchmarks.run` stays CI-sized.  Trained
+params are cached under results/bench_cache/.
+"""
+from __future__ import annotations
+
+import os
+import time
+
+import numpy as np
+
+from repro.core import fastgrnn as fg, pipeline as pl, compression as comp
+from repro.data import hapt
+
+FULL = os.environ.get("REPRO_FULL", "0") == "1"
+SEEDS = (0, 1, 2, 3, 4) if FULL else (0, 1)
+EPOCHS = 100 if FULL else 80
+N_TRAIN = None if FULL else 3000
+N_TEST = None if FULL else 1200
+CACHE = os.path.join(os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+                     "results", "bench_cache")
+
+
+def data():
+    tr = hapt.load("train", n=N_TRAIN)
+    te = hapt.load("test", n=N_TEST)
+    return tr, te
+
+
+def _cache_path(tag: str, seed: int) -> str:
+    os.makedirs(CACHE, exist_ok=True)
+    scale = "full" if FULL else "quick"
+    return os.path.join(CACHE, f"{tag}_s{seed}_{scale}.npz")
+
+
+def train_cached(cfg: fg.FastGRNNConfig, tag: str, seed: int,
+                 iht: comp.IHTConfig | None = None,
+                 epochs: int | None = None):
+    """Train (or load) one configuration; returns the param dict."""
+    path = _cache_path(tag, seed)
+    if os.path.exists(path):
+        with np.load(path) as z:
+            return {k: z[k] for k in z.files}
+    tr, _ = data()
+    res = pl.train_fastgrnn(cfg, tr.windows, tr.labels,
+                            epochs=epochs or EPOCHS, seed=seed, iht=iht)
+    np.savez(path, **{k: np.asarray(v) for k, v in res.params.items()})
+    with np.load(path) as z:
+        return {k: z[k] for k in z.files}
+
+
+def time_call(fn, *args, reps: int = 5, warmup: int = 1) -> float:
+    """Median wall-time per call in microseconds."""
+    for _ in range(warmup):
+        fn(*args)
+    ts = []
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        fn(*args)
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts) * 1e6)
+
+
+def csv_row(name: str, us_per_call: float | str, derived: str) -> str:
+    return f"{name},{us_per_call},{derived}"

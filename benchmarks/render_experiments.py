@@ -1,0 +1,61 @@
+"""Render the §Roofline markdown table from results/dryrun.jsonl into
+EXPERIMENTS.md (replaces everything after the ROOFLINE_TABLE marker)."""
+import json
+import os
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+RESULTS = os.path.join(ROOT, "results", "dryrun.jsonl")
+EXP = os.path.join(ROOT, "EXPERIMENTS.md")
+MARK = "<!-- ROOFLINE_TABLE -->"
+
+
+def fmt(v, p=3):
+    return f"{v:.{p}g}"
+
+
+def main():
+    best = {}
+    for line in open(RESULTS):
+        r = json.loads(line)
+        best[(r["arch"], r["shape"], r["mesh"])] = r
+    lines = [
+        "",
+        "| arch | shape | mesh | t_compute (s) | t_memory (s) | t_collective (s) "
+        "| bottleneck | useful_flops | roofline_frac | notes |",
+        "|---|---|---|---|---|---|---|---|---|---|",
+    ]
+    order = {"train_4k": 0, "prefill_32k": 1, "decode_32k": 2, "long_500k": 3}
+    for (arch, shape, mesh), r in sorted(
+            best.items(), key=lambda kv: (kv[0][0], order[kv[0][1]], kv[0][2])):
+        if r["status"] == "skipped":
+            lines.append(f"| {arch} | {shape} | {mesh} | — | — | — | skipped | — | — "
+                         f"| {r['reason']} |")
+            continue
+        if r["status"] != "ok":
+            lines.append(f"| {arch} | {shape} | {mesh} | ERROR: "
+                         f"{r.get('error','')[:60]} | | | | | | |")
+            continue
+        rf = r["roofline"]
+        notes = []
+        if r.get("seq_parallel"):
+            notes.append("seq-parallel")
+        if r.get("analytic", {}).get("notes"):
+            notes.append(r["analytic"]["notes"])
+        lines.append(
+            f"| {arch} | {shape} | {mesh} | {fmt(rf['t_compute_s'])} "
+            f"| {fmt(rf['t_memory_s'])} | {fmt(rf['t_collective_s'])} "
+            f"| {rf['bottleneck']} | {rf['useful_flops_fraction']:.3f} "
+            f"| **{rf['roofline_fraction']:.3f}** | {'; '.join(notes)} |")
+    n_ok = sum(1 for r in best.values() if r["status"] == "ok")
+    n_skip = sum(1 for r in best.values() if r["status"] == "skipped")
+    lines.append("")
+    lines.append(f"({n_ok} compiled cells, {n_skip} assignment-rule skips; "
+                 "decode rows are latency-bound serving points — see §3.)")
+    src = open(EXP).read()
+    head = src.split(MARK)[0]
+    open(EXP, "w").write(head + MARK + "\n" + "\n".join(lines) + "\n")
+    print(f"rendered {n_ok} ok + {n_skip} skipped rows into EXPERIMENTS.md")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,40 @@
+"""Assignment Sec. Roofline: render the per-(arch x shape x mesh) roofline
+table from results/dryrun.jsonl (produced by repro.launch.dryrun)."""
+from __future__ import annotations
+
+import json
+import os
+
+from . import common
+
+RESULTS = os.path.join(os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+                       "results", "dryrun.jsonl")
+
+
+def roofline_table():
+    if not os.path.exists(RESULTS):
+        return [common.csv_row("roofline_table", "",
+                               "missing results/dryrun.jsonl — run "
+                               "python -m repro.launch.dryrun --all --out results/dryrun.jsonl")]
+    best = {}
+    for line in open(RESULTS):
+        r = json.loads(line)
+        best[(r["arch"], r["shape"], r["mesh"])] = r   # keep latest
+    rows = []
+    for (arch, shape, mesh), r in sorted(best.items()):
+        if r["status"] == "skipped":
+            rows.append(common.csv_row(f"roofline_{arch}_{shape}_{mesh}", "",
+                                       f"skipped:{r['reason']}"))
+            continue
+        if r["status"] != "ok":
+            rows.append(common.csv_row(f"roofline_{arch}_{shape}_{mesh}", "",
+                                       f"ERROR:{r.get('error','')[:80]}"))
+            continue
+        rf = r["roofline"]
+        rows.append(common.csv_row(
+            f"roofline_{arch}_{shape}_{mesh}", "",
+            f"tC={rf['t_compute_s']:.3g}s;tM={rf['t_memory_s']:.3g}s;"
+            f"tX={rf['t_collective_s']:.3g}s;bottleneck={rf['bottleneck']};"
+            f"useful_flops={rf['useful_flops_fraction']:.3f};"
+            f"roofline_frac={rf['roofline_fraction']:.3f}"))
+    return rows

@@ -1,0 +1,45 @@
+"""Serving demo: batched prefill + decode with the L-S-Q quantized path.
+
+    PYTHONPATH=src python examples/serve_demo.py --arch mamba2-780m
+
+Runs a reduced model through the serving engine twice — bf16 weights and
+int8 (Q7) per-tensor quantized weights (the paper's Q stage at LM scale) —
+and reports tokens generated, agreement between the two paths, and the
+analytic HBM-byte saving for the full config.
+"""
+import argparse
+
+import jax
+import numpy as np
+
+import repro.configs as C
+from repro.models import registry
+from repro.serve.engine import Engine, ServeConfig
+
+parser = argparse.ArgumentParser()
+parser.add_argument("--arch", default="deepseek-7b", choices=list(C.ARCHS))
+parser.add_argument("--batch", type=int, default=4)
+parser.add_argument("--new-tokens", type=int, default=24)
+args = parser.parse_args()
+
+full = C.get(args.arch)
+if not full.has_decode:
+    raise SystemExit(f"{args.arch} is encoder-only: no decode path")
+cfg = C.reduced(full, compute_dtype="float32", param_dtype="float32")
+params = registry.init(cfg, jax.random.PRNGKey(0))
+prompts = np.random.default_rng(0).integers(0, cfg.vocab_size,
+                                            (args.batch, 12))
+
+fp = Engine(cfg, params, ServeConfig(max_len=64))
+q8 = Engine(cfg, params, ServeConfig(max_len=64, quant_bits=8))
+out_fp = fp.generate(prompts, max_new=args.new_tokens)
+out_q8 = q8.generate(prompts, max_new=args.new_tokens)
+agree = float((out_fp == out_q8).mean())
+print(f"generated {out_fp.shape[1]} tokens x {args.batch} sequences")
+print(f"bf16-vs-int8 token agreement: {agree*100:.1f}% "
+      f"(greedy, random-init model — trained models track much closer)")
+
+n = registry.param_count(full)
+print(f"full {args.arch}: {n/1e9:.2f}B params -> weight bytes/decode-step "
+      f"{n*2/1e9:.2f} GB (bf16) vs {n/1e9:.2f} GB (int8): the decode "
+      f"memory-roofline term halves (see EXPERIMENTS.md Sec. Perf)")

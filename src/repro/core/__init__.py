@@ -1,0 +1,5 @@
+# The paper's primary contribution: FastGRNN + the L-S-Q compression
+# pipeline (low-rank, IHT sparsity, calibrated Q15 PTQ), LUT activations,
+# the deterministic integer runtime, warm-up characterization, and the
+# energy/latency models.
+from . import fastgrnn, compression, quantization, lut, qruntime, pipeline, warmup, energy, mcu  # noqa: F401

@@ -1,0 +1,124 @@
+"""L-S-Q stage 1+2: low-rank factorization and IHT sparsification.
+
+Generic over any parameter pytree — used by the FastGRNN HAR pipeline and
+by the LM-framework compression feature (models/ factorized Dense layers).
+
+IHT (paper Sec. III-C): at each step retain the top-k magnitude entries of
+every *sparsifiable* tensor and zero the rest; target sparsity follows the
+cubic ramp  s_e = s * min(1, e/e_ramp)^3,  then the mask freezes for the
+fine-tune phase.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class IHTConfig:
+    target_sparsity: float = 0.5        # s: fraction of entries REMOVED
+    ramp_epochs: int = 50               # e_ramp (cubic schedule)
+    finetune_epochs: int = 50           # mask frozen afterwards
+    # Predicate selecting which leaves are sparsified.  The paper sparsifies
+    # the four factor matrices only (not biases, scalars, or the head).
+    leaf_filter: Callable[[str], bool] = staticmethod(
+        lambda name: name in ("W", "U", "W1", "W2", "U1", "U2")
+    )
+
+
+def sparsity_at_epoch(cfg: IHTConfig, epoch: int) -> float:
+    """Paper Eq. (7): cubic ramp to the target sparsity."""
+    frac = min(1.0, epoch / max(cfg.ramp_epochs, 1))
+    return cfg.target_sparsity * frac ** 3
+
+
+def topk_mask(x: jax.Array, keep: int) -> jax.Array:
+    """Boolean mask retaining the ``keep`` largest-|x| entries of x."""
+    if keep >= x.size:
+        return jnp.ones_like(x, dtype=bool)
+    if keep <= 0:
+        return jnp.zeros_like(x, dtype=bool)
+    flat = jnp.abs(x).reshape(-1)
+    # threshold = keep-th largest magnitude
+    thresh = jax.lax.top_k(flat, keep)[0][-1]
+    mask = jnp.abs(x) >= thresh
+    # Tie-break: if ties push us over ``keep``, drop surplus deterministically.
+    # (Ties at the threshold are astronomically unlikely for float32 training
+    # but hypothesis finds them; enforce exact count via ranking.)
+    order = jnp.argsort(-flat, stable=True)
+    rank = jnp.zeros_like(order).at[order].set(jnp.arange(flat.size))
+    exact = (rank < keep).reshape(x.shape)
+    return jnp.where(jnp.sum(mask) == keep, mask, exact)
+
+
+def compute_masks(params: dict[str, Any], cfg: IHTConfig, sparsity: float):
+    """Per-leaf boolean masks at the given sparsity level (flat dict params)."""
+    masks = {}
+    for name, w in params.items():
+        if cfg.leaf_filter(name) and hasattr(w, "size") and w.size > 1:
+            keep = int(round(w.size * (1.0 - sparsity)))
+            masks[name] = topk_mask(w, keep)
+        else:
+            masks[name] = jnp.ones_like(w, dtype=bool) if hasattr(w, "shape") else True
+    return masks
+
+
+def apply_masks(params: dict[str, Any], masks: dict[str, Any]):
+    return {
+        k: (jnp.where(masks[k], v, 0.0) if isinstance(masks[k], jax.Array) else v)
+        for k, v in params.items()
+    }
+
+
+# ---------------------------------------------------------------------------
+# Generic pytree variant for LM models (nested dicts, path-based filter).
+# ---------------------------------------------------------------------------
+
+def compute_masks_tree(params, sparsity: float, path_filter=None):
+    """Masks over an arbitrary pytree; path_filter(path_str, leaf) -> bool."""
+    flat, treedef = jax.tree_util.tree_flatten_with_path(params)
+    masks = []
+    for path, leaf in flat:
+        name = jax.tree_util.keystr(path)
+        sparsify = (leaf.ndim >= 2) if path_filter is None else path_filter(name, leaf)
+        if sparsify:
+            keep = int(round(leaf.size * (1.0 - sparsity)))
+            masks.append(topk_mask(leaf, keep))
+        else:
+            masks.append(jnp.ones_like(leaf, dtype=bool))
+    return jax.tree_util.tree_unflatten(treedef, masks)
+
+
+def apply_masks_tree(params, masks):
+    return jax.tree.map(lambda w, m: jnp.where(m, w, jnp.zeros_like(w)), params, masks)
+
+
+def deployed_param_count(params, masks) -> int:
+    """Stored-parameter accounting (paper 'nonzero' column): sparsified
+    leaves store their kept slots (mask.sum()); dense leaves store every
+    entry regardless of value (a zero-initialized bias still occupies its
+    2 bytes in the deployed image)."""
+    total = 0
+    for k, v in params.items():
+        m = masks.get(k, True)
+        if isinstance(m, jax.Array) and m.dtype == bool and not bool(m.all()):
+            total += int(m.sum())
+        else:
+            total += int(v.size) if hasattr(v, "size") else 1
+    return total
+
+
+def sparsity_of(params, leaf_filter=None) -> float:
+    """Realized sparsity over the sparsifiable leaves."""
+    total = nz = 0
+    if isinstance(params, dict) and leaf_filter is not None:
+        items = [(k, v) for k, v in params.items() if leaf_filter(k)]
+    else:
+        items = [("", v) for v in jax.tree.leaves(params) if v.ndim >= 2]
+    for _, v in items:
+        total += v.size
+        nz += int(jnp.sum(v != 0))
+    return 1.0 - nz / max(total, 1)

@@ -1,0 +1,188 @@
+"""FastGRNN cell (Kusupati et al., NeurIPS'18) — paper Eq. (1)-(3).
+
+z_t   = sigma(W x_t + U h_{t-1} + b_z)
+h~_t  = tanh (W x_t + U h_{t-1} + b_h)
+h_t   = (zeta * (1 - z_t) + nu) * h~_t + z_t * h_{t-1}
+
+The weight pair (W, U) is shared between the gate and the candidate — the
+defining feature of the cell.  zeta, nu in (0,1) are learned scalars,
+parameterized here as sigmoid(raw) exactly as in the reference EdgeML
+implementation.
+
+Low-rank support (paper Sec. III-B): W = W1 @ W2^T (W1: HxRw, W2: dxRw),
+U = U1 @ U2^T (U1, U2: HxRu).  Full-rank cells store W, U directly.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class FastGRNNConfig:
+    input_dim: int = 3          # d — tri-axial acceleration
+    hidden_dim: int = 16        # H
+    num_classes: int = 6
+    rank_w: int | None = None   # r_w; None = full rank
+    rank_u: int | None = None   # r_u; None = full rank
+    # paper Sec. VI-E future direction 1: U_eff = LowRank(r_u) + diag(alpha)
+    # — a diagonal residual lets a static DC-like signal pass through while
+    # the low-rank branch carries the dynamic pattern (+H params).
+    diag_residual: bool = False
+    zeta_init: float = 1.0      # raw (pre-sigmoid) init, EdgeML default
+    nu_init: float = -4.0       # raw (pre-sigmoid) init, EdgeML default
+
+    @property
+    def low_rank(self) -> bool:
+        return self.rank_w is not None or self.rank_u is not None
+
+    def cell_param_count(self) -> int:
+        """Paper Eq. (4) for full rank; factored count for low rank."""
+        d, H = self.input_dim, self.hidden_dim
+        if self.rank_w is None:
+            n_w = H * d
+        else:
+            n_w = H * self.rank_w + d * self.rank_w
+        if self.rank_u is None:
+            n_u = H * H
+        else:
+            n_u = 2 * H * self.rank_u
+        if self.diag_residual:
+            n_u += H
+        return n_w + n_u + 2 * H + 2  # + b_z, b_h, zeta, nu
+
+    def head_param_count(self) -> int:
+        return self.hidden_dim * self.num_classes + self.num_classes
+
+
+def init_params(cfg: FastGRNNConfig, key: jax.Array) -> dict[str, Any]:
+    """Initialize a FastGRNN + dense classifier-head parameter pytree."""
+    d, H = cfg.input_dim, cfg.hidden_dim
+    ks = jax.random.split(key, 8)
+
+    def _mat(k, shape):
+        # EdgeML uses N(0, 0.1) init for factor matrices.
+        return 0.1 * jax.random.normal(k, shape, dtype=jnp.float32)
+
+    p: dict[str, Any] = {}
+    if cfg.rank_w is None:
+        p["W"] = _mat(ks[0], (H, d))
+    else:
+        p["W1"] = _mat(ks[0], (H, cfg.rank_w))
+        p["W2"] = _mat(ks[1], (d, cfg.rank_w))
+    if cfg.rank_u is None:
+        p["U"] = _mat(ks[2], (H, H))
+    else:
+        p["U1"] = _mat(ks[2], (H, cfg.rank_u))
+        p["U2"] = _mat(ks[3], (H, cfg.rank_u))
+    if cfg.diag_residual:
+        p["alpha"] = 0.1 * jnp.ones((H,), jnp.float32)
+    p["b_z"] = jnp.ones((H,), jnp.float32)
+    p["b_h"] = jnp.zeros((H,), jnp.float32)
+    p["zeta"] = jnp.asarray(cfg.zeta_init, jnp.float32)
+    p["nu"] = jnp.asarray(cfg.nu_init, jnp.float32)
+    p["head_w"] = _mat(ks[4], (H, cfg.num_classes))
+    p["head_b"] = jnp.zeros((cfg.num_classes,), jnp.float32)
+    return p
+
+
+def effective_W(params: dict[str, Any]) -> jax.Array:
+    if "W" in params:
+        return params["W"]
+    return params["W1"] @ params["W2"].T
+
+
+def effective_U(params: dict[str, Any]) -> jax.Array:
+    if "U" in params:
+        u = params["U"]
+    else:
+        u = params["U1"] @ params["U2"].T
+    if "alpha" in params:
+        u = u + jnp.diag(params["alpha"])
+    return u
+
+
+def cell_step(
+    params: dict[str, Any],
+    h: jax.Array,
+    x: jax.Array,
+    *,
+    sigma=jax.nn.sigmoid,
+    tanh=jnp.tanh,
+) -> jax.Array:
+    """One FastGRNN step.  h: (..., H), x: (..., d).
+
+    ``sigma``/``tanh`` are injectable so the LUT path (core/lut.py) and
+    Pallas kernels can share this definition as their oracle.
+    """
+    if "W" in params:
+        wx = x @ params["W"].T
+    else:
+        wx = (x @ params["W2"]) @ params["W1"].T  # W1 (W2^T x): 2 thin matmuls
+    if "U" in params:
+        uh = h @ params["U"].T
+    else:
+        uh = (h @ params["U2"]) @ params["U1"].T
+    if "alpha" in params:
+        uh = uh + params["alpha"] * h      # diagonal residual (Sec. VI-E)
+    pre = wx + uh
+    z = sigma(pre + params["b_z"])
+    h_tilde = tanh(pre + params["b_h"])
+    zeta = jax.nn.sigmoid(params["zeta"])
+    nu = jax.nn.sigmoid(params["nu"])
+    return (zeta * (1.0 - z) + nu) * h_tilde + z * h
+
+
+def run_sequence(
+    params: dict[str, Any],
+    xs: jax.Array,
+    h0: jax.Array | None = None,
+    *,
+    sigma=jax.nn.sigmoid,
+    tanh=jnp.tanh,
+    return_trajectory: bool = False,
+):
+    """Run a full window.  xs: (T, ..., d) time-major.  Returns final h
+    (and the (T, ..., H) trajectory if requested)."""
+    H = params["b_z"].shape[0]
+    if h0 is None:
+        batch_shape = xs.shape[1:-1]
+        h0 = jnp.zeros(batch_shape + (H,), xs.dtype)
+
+    def body(h, x):
+        h_next = cell_step(params, h, x, sigma=sigma, tanh=tanh)
+        return h_next, (h_next if return_trajectory else None)
+
+    h_final, traj = jax.lax.scan(body, h0, xs)
+    if return_trajectory:
+        return h_final, traj
+    return h_final
+
+
+def logits_from_hidden(params: dict[str, Any], h: jax.Array) -> jax.Array:
+    return h @ params["head_w"] + params["head_b"]
+
+
+def forward_window(params, xs, **kw):
+    """(T, ..., d) window -> (..., C) logits from the final hidden state."""
+    return logits_from_hidden(params, run_sequence(params, xs, **kw))
+
+
+def loss_fn(params, xs, labels, **kw):
+    """Cross-entropy over windows. xs: (T, B, d), labels: (B,)."""
+    logits = forward_window(params, xs, **kw)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, labels[:, None], axis=-1).squeeze(-1)
+    return nll.mean()
+
+
+def count_params(params: dict[str, Any]) -> int:
+    return int(sum(np.prod(v.shape) for v in jax.tree.leaves(params)))
+
+
+def count_nonzero(params: dict[str, Any]) -> int:
+    return int(sum(int(jnp.sum(v != 0)) for v in jax.tree.leaves(params)))

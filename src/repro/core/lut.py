@@ -1,0 +1,132 @@
+"""LUT-based activations (paper Sec. III-E, Appendix C).
+
+256-entry tables over [-8, +8], each entry sampled at the *center* of its
+bucket (the (i + 0.5) offset — the max-likelihood estimate for a uniform
+sub-bucket input, avoiding the half-bucket bias).  Inputs outside the
+domain saturate, which is exact to float precision for sigma/tanh tails.
+
+The paper text (Sec. III-E) describes linear interpolation between adjacent
+entries while the deployed Appendix-C runtime does a nearest-bucket load; we
+implement both.  ``mode="nearest"`` matches the deployed C engine (and is
+what the deterministic qruntime uses); ``mode="lerp"`` matches Sec. III-E.
+
+These jnp implementations are the oracles for the Pallas kernel in
+``repro/kernels/lut_act``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+LUT_SIZE = 256
+INPUT_MIN = -8.0
+INPUT_MAX = 8.0
+BUCKET_WIDTH = (INPUT_MAX - INPUT_MIN) / LUT_SIZE
+LUT_INPUT_SCALE = 1.0 / BUCKET_WIDTH
+
+
+def _np_sigmoid(x):
+    return 1.0 / (1.0 + np.exp(-x))
+
+
+_GENERATORS = {
+    "sigmoid": _np_sigmoid,
+    "tanh": np.tanh,
+    "silu": lambda x: x * _np_sigmoid(x),
+    "gelu": lambda x: 0.5 * x * (1.0 + np.tanh(np.sqrt(2.0 / np.pi) * (x + 0.044715 * x**3))),
+    "softplus": lambda x: np.log1p(np.exp(-np.abs(x))) + np.maximum(x, 0.0),
+}
+
+# Saturation values outside [-8, 8].  For sigma/tanh these equal f(+-8) to
+# float precision (paper).  For the unbounded fns (silu/gelu/softplus ~ x,
+# or 0) the linear tail is handled explicitly in lut_eval.
+_LINEAR_TAILS = {"silu", "gelu", "softplus"}
+
+
+def make_lut(fn: str, size: int = LUT_SIZE, lo: float = INPUT_MIN, hi: float = INPUT_MAX) -> np.ndarray:
+    """Bucket-center table, Appendix C."""
+    bw = (hi - lo) / size
+    centers = lo + (np.arange(size) + 0.5) * bw
+    return _GENERATORS[fn](centers).astype(np.float32)
+
+
+@dataclasses.dataclass(frozen=True)
+class LUTActivations:
+    """A pair (or set) of generated tables with eval helpers."""
+    size: int = LUT_SIZE
+    lo: float = INPUT_MIN
+    hi: float = INPUT_MAX
+    mode: str = "nearest"  # "nearest" (Appendix C) | "lerp" (Sec. III-E)
+
+    def table(self, fn: str) -> jnp.ndarray:
+        return jnp.asarray(make_lut(fn, self.size, self.lo, self.hi))
+
+    def __call__(self, fn: str, x: jax.Array) -> jax.Array:
+        return lut_eval(self.table(fn), x, lo=self.lo, hi=self.hi,
+                        mode=self.mode, linear_tail=(fn in _LINEAR_TAILS))
+
+
+@partial(jax.jit, static_argnames=("lo", "hi", "mode", "linear_tail"))
+def lut_eval(
+    table: jax.Array,
+    x: jax.Array,
+    *,
+    lo: float = INPUT_MIN,
+    hi: float = INPUT_MAX,
+    mode: str = "nearest",
+    linear_tail: bool = False,
+) -> jax.Array:
+    """Vectorized LUT activation.  Matches the Appendix-C runtime:
+
+    - x <= lo  -> table[0]      (or linear tail)
+    - x >= hi  -> table[-1]     (or linear tail)
+    - else     -> table[(x - lo) * scale]   (nearest), or lerp of adjacent.
+    """
+    size = table.shape[0]
+    bw = (hi - lo) / size
+    xf = x.astype(jnp.float32)
+    if mode == "nearest":
+        idx = jnp.clip(((xf - lo) * (1.0 / bw)).astype(jnp.int32), 0, size - 1)
+        y = jnp.take(table, idx)
+    elif mode == "lerp":
+        # continuous position against bucket centers
+        pos = (xf - lo) / bw - 0.5
+        i0 = jnp.clip(jnp.floor(pos).astype(jnp.int32), 0, size - 1)
+        i1 = jnp.clip(i0 + 1, 0, size - 1)
+        frac = jnp.clip(pos - i0.astype(jnp.float32), 0.0, 1.0)
+        y = (1.0 - frac) * jnp.take(table, i0) + frac * jnp.take(table, i1)
+    else:
+        raise ValueError(f"unknown LUT mode {mode!r}")
+    below, above = xf <= lo, xf >= hi
+    if linear_tail:
+        # silu/gelu -> x for x>>0, -> 0 for x<<0 ; softplus -> x / 0.
+        y = jnp.where(above, xf, jnp.where(below, 0.0, y))
+    else:
+        y = jnp.where(above, table[size - 1], jnp.where(below, table[0], y))
+    return y.astype(x.dtype)
+
+
+def lut_sigmoid(x: jax.Array, mode: str = "nearest") -> jax.Array:
+    return lut_eval(jnp.asarray(make_lut("sigmoid")), x, mode=mode)
+
+
+def lut_tanh(x: jax.Array, mode: str = "nearest") -> jax.Array:
+    return lut_eval(jnp.asarray(make_lut("tanh")), x, mode=mode)
+
+
+def flash_bytes(n_tables: int = 2, size: int = LUT_SIZE, itemsize: int = 4) -> int:
+    """Paper: 'The two tables together occupy 2 KB of Flash'."""
+    return n_tables * size * itemsize
+
+
+def max_abs_error(fn: str, mode: str = "nearest", n: int = 100_000) -> float:
+    """Worst-case LUT error over the domain (used in tests/benchmarks)."""
+    xs = np.linspace(INPUT_MIN, INPUT_MAX, n).astype(np.float32)
+    ref = _GENERATORS[fn](xs.astype(np.float64))
+    got = np.asarray(lut_eval(jnp.asarray(make_lut(fn)), jnp.asarray(xs), mode=mode))
+    return float(np.max(np.abs(got - ref)))

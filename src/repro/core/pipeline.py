@@ -1,0 +1,174 @@
+"""End-to-end L-S-Q pipeline orchestration (paper Fig. 1):
+
+  float training -> low-rank -> IHT sparsity (cubic ramp + frozen finetune)
+  -> per-tensor Q15 PTQ + activation calibration -> deterministic qruntime.
+
+This is the MCU-scale instantiation of the framework's compression feature,
+reproducing Tables I-V.  The LM-scale instantiation lives in
+repro/train/ + repro/serve/ (same QuantConfig / IHT machinery).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import fastgrnn as fg
+from . import compression as comp
+from . import quantization as q
+from .qruntime import QRuntime, calibrate
+
+
+@dataclasses.dataclass
+class TrainResult:
+    params: dict[str, Any]
+    history: list[dict[str, float]]
+    masks: dict[str, Any] | None = None
+
+
+def _adam_init(params):
+    z = jax.tree.map(jnp.zeros_like, params)
+    return {"m": z, "v": jax.tree.map(jnp.zeros_like, params), "t": jnp.zeros((), jnp.int32)}
+
+
+def _adam_update(params, grads, state, lr=1e-3, b1=0.9, b2=0.999, eps=1e-8):
+    t = state["t"] + 1
+    m = jax.tree.map(lambda m_, g: b1 * m_ + (1 - b1) * g, state["m"], grads)
+    v = jax.tree.map(lambda v_, g: b2 * v_ + (1 - b2) * g * g, state["v"], grads)
+    tf = t.astype(jnp.float32)
+    def upd(p, m_, v_):
+        mhat = m_ / (1 - b1 ** tf)
+        vhat = v_ / (1 - b2 ** tf)
+        return p - lr * mhat / (jnp.sqrt(vhat) + eps)
+    return jax.tree.map(upd, params, m, v), {"m": m, "v": v, "t": t}
+
+
+def train_fastgrnn(
+    cfg: fg.FastGRNNConfig,
+    train_windows: np.ndarray,          # (N, T, d)
+    train_labels: np.ndarray,
+    *,
+    epochs: int = 100,
+    batch_size: int = 64,
+    lr: float = 1e-3,
+    seed: int = 0,
+    iht: comp.IHTConfig | None = None,
+    eval_fn=None,
+    eval_every: int = 10,
+) -> TrainResult:
+    """Adam training with optional in-loop IHT (paper Sec. IV-B protocol)."""
+    key = jax.random.PRNGKey(seed)
+    params = fg.init_params(cfg, key)
+    opt = _adam_init(params)
+
+    @jax.jit
+    def step(params, opt, xs, ys):
+        loss, grads = jax.value_and_grad(fg.loss_fn)(params, xs, ys)
+        params, opt = _adam_update(params, grads, opt, lr=lr)
+        return params, opt, loss
+
+    @jax.jit
+    def mask_step(params, opt, xs, ys, masks):
+        loss, grads = jax.value_and_grad(fg.loss_fn)(params, xs, ys)
+        params, opt = _adam_update(params, grads, opt, lr=lr)
+        params = comp.apply_masks(params, masks)
+        return params, opt, loss
+
+    xs_all = np.transpose(train_windows, (1, 0, 2))  # time-major (T, N, d)
+    n = len(train_labels)
+    history: list[dict[str, float]] = []
+    masks = None
+
+    for epoch in range(epochs):
+        rng = np.random.default_rng(seed * 1000 + epoch)
+        order = rng.permutation(n)
+        losses = []
+        if iht is not None:
+            # recompute masks THROUGH epoch == ramp_epochs so the frozen
+            # mask is at the full target sparsity (paper: 'reaching the
+            # target sparsity at epoch 50 and remaining frozen')
+            if epoch <= iht.ramp_epochs or masks is None:
+                s_e = comp.sparsity_at_epoch(iht, epoch)
+                masks = comp.compute_masks(params, iht, s_e)
+            params = comp.apply_masks(params, masks)
+        for i in range(0, n - batch_size + 1, batch_size):
+            j = order[i:i + batch_size]
+            xb = jnp.asarray(xs_all[:, j])
+            yb = jnp.asarray(train_labels[j])
+            if iht is not None:
+                params, opt, loss = mask_step(params, opt, xb, yb, masks)
+            else:
+                params, opt, loss = step(params, opt, xb, yb)
+            losses.append(float(loss))
+        rec = {"epoch": epoch, "loss": float(np.mean(losses))}
+        if eval_fn is not None and (epoch % eval_every == 0 or epoch == epochs - 1):
+            rec.update(eval_fn(params))
+        history.append(rec)
+    return TrainResult(params=params, history=history, masks=masks)
+
+
+# ---------------------------------------------------------------------------
+# Evaluation
+# ---------------------------------------------------------------------------
+
+def predict_fp32(params, windows: np.ndarray, batch: int = 512,
+                 sigma=jax.nn.sigmoid, tanh=jnp.tanh) -> np.ndarray:
+    outs = []
+    fwd = jax.jit(lambda xs: fg.forward_window(params, xs, sigma=sigma, tanh=tanh))
+    for i in range(0, len(windows), batch):
+        xs = jnp.asarray(np.transpose(windows[i:i + batch], (1, 0, 2)))
+        outs.append(np.argmax(np.asarray(fwd(xs)), axis=-1))
+    return np.concatenate(outs).astype(np.int32)
+
+
+def macro_f1(y_true: np.ndarray, y_pred: np.ndarray, n_classes: int = 6) -> float:
+    f1s = []
+    for c in range(n_classes):
+        tp = np.sum((y_pred == c) & (y_true == c))
+        fp = np.sum((y_pred == c) & (y_true != c))
+        fn = np.sum((y_pred != c) & (y_true == c))
+        denom = 2 * tp + fp + fn
+        f1s.append(2 * tp / denom if denom > 0 else 0.0)
+    return float(np.mean(f1s))
+
+
+def per_class_f1(y_true, y_pred, n_classes: int = 6) -> list[float]:
+    out = []
+    for c in range(n_classes):
+        tp = np.sum((y_pred == c) & (y_true == c))
+        fp = np.sum((y_pred == c) & (y_true != c))
+        fn = np.sum((y_pred != c) & (y_true == c))
+        denom = 2 * tp + fp + fn
+        out.append(float(2 * tp / denom) if denom > 0 else 0.0)
+    return out
+
+
+def accuracy(y_true, y_pred) -> float:
+    return float(np.mean(y_true == y_pred))
+
+
+# ---------------------------------------------------------------------------
+# Deployment (PTQ + calibration -> QRuntime)
+# ---------------------------------------------------------------------------
+
+def deploy(params, calib_windows: np.ndarray, *,
+           quant: q.QuantConfig = q.QuantConfig(),
+           quantize_activations: bool = False,
+           naive_activations: bool = False) -> QRuntime:
+    """Quantize weights, run the 5-minibatch calibration pass, return the
+    deterministic integer runtime (the 'deployed' model)."""
+    qp = q.quantize_params(params, quant)
+    rt = QRuntime(qp)
+    if naive_activations:
+        return QRuntime(qp, naive_acts=True)
+    if quantize_activations:
+        scales = calibrate(rt, calib_windows, headroom=quant.headroom)
+        return QRuntime(qp, act_scales=scales)
+    return rt  # deployed config: Q15 weights + FP32 acts through LUT
+
+
+def agreement(pred_a: np.ndarray, pred_b: np.ndarray) -> float:
+    return float(np.mean(pred_a == pred_b))

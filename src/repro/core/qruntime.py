@@ -1,0 +1,169 @@
+"""Deterministic 'C-equivalent' integer inference runtime (paper Sec. IV-D,
+V-F, VI-B).
+
+Mirrors the deployed ~200-line fastgrnn.cpp translation unit:
+
+  * weights stored as int16 Q15 + per-tensor float scale
+  * dequantize-on-use:  float w = (float) W_q15[i] * scale   (Appendix B)
+  * FP32 accumulate in a FIXED evaluation order (matvec as an ordered
+    dot-product loop -> bit-stable across IEEE-754 implementations)
+  * activations through the 256-entry nearest-bucket LUT (Appendix C)
+  * optional calibrated Q15 *activation* storage between steps — the
+    'calibrated Q15 acts' counterfactual of Table V.
+
+Three execution paths are provided, matching the paper's verification
+protocol: (1) FP32 reference (core/fastgrnn.py), (2) this NumPy
+C-equivalent, (3) the Pallas fastgrnn_cell kernel (interpret mode).  The
+cross-platform agreement benchmark compares argmax predictions of all
+three over the full test set.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import numpy as np
+
+from .lut import make_lut, LUT_SIZE, INPUT_MIN, INPUT_MAX
+from .quantization import QuantizedParams, Q15_MAX
+
+
+_SIG_LUT = make_lut("sigmoid")
+_TANH_LUT = make_lut("tanh")
+_BW = (INPUT_MAX - INPUT_MIN) / LUT_SIZE
+_INV_BW = 1.0 / _BW
+
+
+def _lut_eval_scalar(lut: np.ndarray, x: np.ndarray) -> np.ndarray:
+    """Vector-of-scalars nearest-bucket LUT, identical to Appendix C."""
+    x = np.asarray(x, np.float32)
+    idx = np.clip(((x - INPUT_MIN) * _INV_BW).astype(np.int32), 0, LUT_SIZE - 1)
+    y = lut[idx]
+    y = np.where(x >= INPUT_MAX, lut[LUT_SIZE - 1], y)
+    y = np.where(x <= INPUT_MIN, lut[0], y)
+    return y.astype(np.float32)
+
+
+def _deq(qp: QuantizedParams, name: str) -> np.ndarray:
+    """Dequantize one tensor the way the C engine does (elementwise f32)."""
+    q = np.asarray(qp.q[name], np.int32)
+    s = np.float32(qp.scales[name])
+    return (q.astype(np.float32) * s).astype(np.float32)
+
+
+def _matvec(A: np.ndarray, x: np.ndarray) -> np.ndarray:
+    """Fixed-order FP32 matvec: out[i] = sum_j A[i,j]*x[j], j ascending.
+
+    np.dot on contiguous float32 uses pairwise summation whose order can
+    differ across BLAS builds; an explicit fori loop is the bit-stable
+    reference.  For speed we use einsum on small dims — verified in tests to
+    be bit-identical to the loop at these sizes — falling back to the loop
+    if shapes are large enough for BLAS kernels to reorder.
+    """
+    out = np.zeros(A.shape[0], np.float32)
+    for j in range(A.shape[1]):
+        out += A[:, j] * np.float32(x[j])
+    return out.astype(np.float32)
+
+
+@dataclasses.dataclass
+class QRuntime:
+    """Deployed-model runtime: Q15 weights + scales (+ optional act quant)."""
+    qp: QuantizedParams
+    act_scales: dict[str, float] | None = None  # calibrated Q15 activations
+    naive_acts: bool = False                     # naive Q15 [-1,1) activations
+
+    def __post_init__(self):
+        self.low_rank = "W1" in self.qp.q or "W1" in self.qp.fp
+        names = (["W1", "W2", "U1", "U2"] if self.low_rank else ["W", "U"])
+        self._w = {n: _deq(self.qp, n) for n in names + ["head_w"]}
+        f32 = lambda n: np.asarray(self.qp.fp[n], np.float32)
+        self._b_z, self._b_h = f32("b_z"), f32("b_h")
+        self._head_b = f32("head_b")
+        self._zeta = np.float32(1.0 / (1.0 + np.exp(-float(self.qp.fp["zeta"]))))
+        self._nu = np.float32(1.0 / (1.0 + np.exp(-float(self.qp.fp["nu"]))))
+
+    # -- activation storage quantization (Table V modes) ------------------
+    def _store(self, name: str, t: np.ndarray) -> np.ndarray:
+        if self.naive_acts:
+            scale = np.float32(1.0 / Q15_MAX)
+        elif self.act_scales is not None and name in self.act_scales:
+            scale = np.float32(self.act_scales[name])
+        else:
+            return t
+        q = np.clip(np.round(t / scale), -Q15_MAX - 1, Q15_MAX)
+        return (q * scale).astype(np.float32)
+
+    def step(self, h: np.ndarray, x: np.ndarray) -> np.ndarray:
+        """One fastgrnn_step() — mirrors the C translation unit."""
+        if self.low_rank:
+            wx = _matvec(self._w["W1"], _matvec(self._w["W2"].T, x))
+            uh = _matvec(self._w["U1"], _matvec(self._w["U2"].T, h))
+        else:
+            wx = _matvec(self._w["W"], x)
+            uh = _matvec(self._w["U"], h)
+        pre = self._store("pre", wx + uh)
+        z = _lut_eval_scalar(_SIG_LUT, pre + self._b_z)
+        h_tilde = _lut_eval_scalar(_TANH_LUT, pre + self._b_h)
+        z = self._store("z", z)
+        h_tilde = self._store("h_tilde", h_tilde)
+        h_new = (self._zeta * (1.0 - z) + self._nu) * h_tilde + z * h
+        return self._store("h", h_new.astype(np.float32))
+
+    def run_window(self, xs: np.ndarray, return_trajectory: bool = False):
+        """xs: (T, d) -> logits (C,) [+ (T, H) hidden trajectory]."""
+        H = self._b_z.shape[0]
+        h = np.zeros(H, np.float32)
+        traj = np.zeros((xs.shape[0], H), np.float32) if return_trajectory else None
+        for t in range(xs.shape[0]):
+            h = self.step(h, xs[t])
+            if return_trajectory:
+                traj[t] = h
+        logits = _matvec(self._w["head_w"].T, h) + self._head_b
+        logits = self._store("logits", logits)
+        return (logits, traj) if return_trajectory else logits
+
+    def predict(self, xs: np.ndarray) -> int:
+        return int(np.argmax(self.run_window(xs)))
+
+    def predict_batch(self, windows: np.ndarray) -> np.ndarray:
+        """windows: (N, T, d) -> (N,) predictions."""
+        return np.array([self.predict(w) for w in windows], np.int32)
+
+
+def record_activations(rt: QRuntime, xs: np.ndarray) -> dict[str, np.ndarray]:
+    """Collect the intermediate tensors the calibration pass needs."""
+    H = rt._b_z.shape[0]
+    h = np.zeros(H, np.float32)
+    maxima: dict[str, float] = {}
+
+    def upd(name, t):
+        maxima[name] = max(maxima.get(name, 0.0), float(np.max(np.abs(t))))
+
+    for t in range(xs.shape[0]):
+        if rt.low_rank:
+            wx = _matvec(rt._w["W1"], _matvec(rt._w["W2"].T, xs[t]))
+            uh = _matvec(rt._w["U1"], _matvec(rt._w["U2"].T, h))
+        else:
+            wx = _matvec(rt._w["W"], xs[t])
+            uh = _matvec(rt._w["U"], h)
+        pre = wx + uh
+        z = _lut_eval_scalar(_SIG_LUT, pre + rt._b_z)
+        h_tilde = _lut_eval_scalar(_TANH_LUT, pre + rt._b_h)
+        h = (rt._zeta * (1.0 - z) + rt._nu) * h_tilde + z * h
+        for n, v in (("pre", pre), ("z", z), ("h_tilde", h_tilde), ("h", h)):
+            upd(n, v)
+    logits = _matvec(rt._w["head_w"].T, h) + rt._head_b
+    upd("logits", logits)
+    return maxima
+
+
+def calibrate(rt: QRuntime, windows: np.ndarray, headroom: float = 0.10) -> dict[str, float]:
+    """Paper Sec. III-D: 5-minibatch max-abs calibration with 10% headroom."""
+    maxima: dict[str, float] = {}
+    for w in windows:
+        m = record_activations(rt, w)
+        for k, v in m.items():
+            maxima[k] = max(maxima.get(k, 0.0), v)
+    return {k: ((1.0 + headroom) * v) / Q15_MAX if v > 0 else 1.0 / Q15_MAX
+            for k, v in maxima.items()}

@@ -1,0 +1,132 @@
+"""L-S-Q stage 3: per-tensor Q15/Q7 post-training quantization with
+explicit activation calibration (paper Sec. III-D, Appendix B).
+
+Weight quantization (paper Eq. (8) + Appendix B):
+    scale_l = max_ij |W_ij| / 32767            (Q15; 127 for Q7)
+    Wq      = clip(round(W / scale_l), -2^15, 2^15 - 1)
+    dequant = float(Wq) * scale_l
+
+Activation calibration: run N calibration mini-batches through the FP32
+model, record the empirical max |t| of every intermediate tensor, apply a
+10% headroom, and assign each activation its own scale.  This is the
+paper's key dividing line between lossless and catastrophic deployment.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+Q15_MAX = 32767
+Q7_MAX = 127
+
+
+@dataclasses.dataclass(frozen=True)
+class QuantConfig:
+    bits: int = 16                      # 16 -> Q15 (int16), 8 -> Q7 (int8)
+    calibration_batches: int = 5        # paper Table X
+    headroom: float = 0.10              # paper Table X: 10%
+    # Leaves kept in float (paper keeps biases in the FP32 accumulate path).
+    float_leaves: tuple[str, ...] = ("b_z", "b_h", "zeta", "nu", "head_b")
+
+    @property
+    def qmax(self) -> int:
+        return (1 << (self.bits - 1)) - 1
+
+    @property
+    def dtype(self):
+        return jnp.int16 if self.bits == 16 else jnp.int8
+
+
+def quantize_tensor(w: jax.Array, qmax: int):
+    """Per-tensor symmetric quantization.  Returns (int tensor, scale)."""
+    amax = jnp.max(jnp.abs(w))
+    scale = jnp.where(amax > 0, amax / qmax, 1.0 / qmax)
+    q = jnp.clip(jnp.round(w / scale), -qmax - 1, qmax)
+    return q, scale
+
+
+def dequantize_tensor(q: jax.Array, scale) -> jax.Array:
+    return q.astype(jnp.float32) * scale
+
+
+@dataclasses.dataclass
+class QuantizedParams:
+    """Q-weights + per-tensor scales + float passthrough leaves."""
+    q: dict[str, Any]                   # name -> int16/int8 array
+    scales: dict[str, Any]              # name -> float scale
+    fp: dict[str, Any]                  # name -> float array (not quantized)
+    bits: int = 16
+
+    def dequantize(self) -> dict[str, Any]:
+        out = {k: dequantize_tensor(v, self.scales[k]) for k, v in self.q.items()}
+        out.update(self.fp)
+        return out
+
+    def nbytes(self) -> int:
+        itemsize = 2 if self.bits == 16 else 1
+        return int(sum(np.prod(v.shape) for v in self.q.values())) * itemsize
+
+    def nonzero(self) -> int:
+        n = sum(int(jnp.sum(v != 0)) for v in self.q.values())
+        n += sum(int(jnp.sum(v != 0)) for v in self.fp.values())
+        return int(n)
+
+
+def quantize_params(params: dict[str, Any], cfg: QuantConfig) -> QuantizedParams:
+    q, scales, fp = {}, {}, {}
+    for name, w in params.items():
+        if name in cfg.float_leaves or getattr(w, "ndim", 0) == 0:
+            fp[name] = jnp.asarray(w, jnp.float32)
+        else:
+            qi, s = quantize_tensor(jnp.asarray(w, jnp.float32), cfg.qmax)
+            q[name] = qi.astype(cfg.dtype)
+            scales[name] = s
+    return QuantizedParams(q=q, scales=scales, fp=fp, bits=cfg.bits)
+
+
+# ---------------------------------------------------------------------------
+# Activation calibration (paper Sec. III-D)
+# ---------------------------------------------------------------------------
+
+def calibrate_activations(
+    record_fn,
+    batches,
+    *,
+    headroom: float = 0.10,
+) -> dict[str, float]:
+    """Run ``record_fn(batch) -> dict[name, tensor]`` over calibration batches
+    and return per-activation scales sized to (1+headroom) * empirical max.
+
+    ``record_fn`` returns every intermediate tensor of interest (pre-
+    activations, hidden state, logits...).  The returned scales map each
+    activation name -> Q15 scale = (1+headroom)*max|t| / 32767.
+    """
+    maxima: dict[str, float] = {}
+    for batch in batches:
+        acts = record_fn(batch)
+        for name, t in acts.items():
+            m = float(jnp.max(jnp.abs(t)))
+            maxima[name] = max(maxima.get(name, 0.0), m)
+    return {
+        name: ((1.0 + headroom) * m) / Q15_MAX if m > 0 else 1.0 / Q15_MAX
+        for name, m in maxima.items()
+    }
+
+
+def fake_quant_activation(t: jax.Array, scale: float) -> jax.Array:
+    """Simulate Q15 storage of an activation: quantize -> clip -> dequantize.
+
+    With a *naive* scale (1/32767, i.e. assuming range [-1,1)) this
+    reproduces the paper's catastrophic collapse; with a calibrated scale it
+    is lossless to rounding noise.
+    """
+    q = jnp.clip(jnp.round(t / scale), -Q15_MAX - 1, Q15_MAX)
+    return q * scale
+
+
+NAIVE_ACT_SCALE = 1.0 / Q15_MAX  # the naive Q15 [-1, 1) assumption

@@ -1,0 +1,1 @@
+from . import hapt, tokens  # noqa: F401

@@ -1,0 +1,10 @@
+# Pallas TPU kernels for the compute hot-spots of the L-S-Q deployment
+# path (paper Sec. III-E / V-G, adapted MCU->TPU per DESIGN.md Sec. 2):
+#   lut_act       — 256-entry sigma/tanh LUT activations, VMEM-resident table
+#   fastgrnn_cell — fused full-window FastGRNN scan (weights pinned in VMEM)
+#   q15_matmul    — dequant-fused int16/int8 x bf16 blocked matmul (serving)
+#   ssd_scan      — Mamba2 chunked SSD scan (state carried across grid steps)
+# Each package: kernel.py (pl.pallas_call + BlockSpec), ops.py (jit'd
+# wrapper with shape plumbing), ref.py (pure-jnp oracle).  All validated in
+# interpret mode on CPU; TPU is the lowering target.
+from . import lut_act, fastgrnn_cell, q15_matmul, ssd_scan  # noqa: F401

@@ -1,0 +1,99 @@
+"""Pallas TPU kernel: fused FastGRNN full-window scan (paper Eq. 1-3 +
+Sec. III-E LUT activations).
+
+MCU -> TPU adaptation (DESIGN.md Sec. 2): on the MSP430 the weights live in
+Flash and the ~300 B working set in SRAM for the whole 128-sample window.
+Here the low-rank factors, biases, both LUTs AND the hidden state stay
+resident in VMEM for the entire window — one HBM read of x, one write of
+the trajectory, zero weight re-fetches, and the per-step dispatch overhead
+of 128 separate cell calls collapses into one kernel launch (the TPU
+analogue of the paper's 30.5x LUT win being about *eliminating per-step
+overhead*, not raw FLOPs).
+
+Grid: one program per batch tile; fori_loop over T inside the kernel.
+Dims are padded to the (8,128) float32 tile by ops.py; the real H=16,d=3
+cell uses a (B_tile, 128)-padded layout where lanes beyond H/d are zero.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+B_TILE = 8
+
+
+def _cell_kernel(sig_lut_ref, tanh_lut_ref, x_ref, w_ref, u_ref,
+                 bz_ref, bh_ref, scal_ref, h_ref, traj_ref,
+                 *, T: int, lo: float, hi: float):
+    """x: (T, B_TILE, Dp); w: (Dp, Hp) = W^T (pre-multiplied low-rank);
+    u: (Hp, Hp) = U^T; scal: (2,) [zeta, nu] post-sigmoid; outputs:
+    h (B_TILE, Hp), traj (T, B_TILE, Hp)."""
+    size = sig_lut_ref.shape[0]
+    bw = (hi - lo) / size
+    inv_bw = 1.0 / bw
+
+    def lut(table, v):
+        idx = jnp.clip(((v - lo) * inv_bw).astype(jnp.int32), 0, size - 1)
+        y = jnp.take(table, idx)
+        return jnp.where(v >= hi, table[size - 1],
+                         jnp.where(v <= lo, table[0], y))
+
+    w = w_ref[...]
+    u = u_ref[...]
+    b_z = bz_ref[...]
+    b_h = bh_ref[...]
+    zeta = scal_ref[0]
+    nu = scal_ref[1]
+    sig_t = sig_lut_ref[...]
+    tanh_t = tanh_lut_ref[...]
+
+    def step(t, h):
+        x_t = x_ref[t]                                   # (B_TILE, Dp)
+        pre = jnp.dot(x_t, w, preferred_element_type=jnp.float32) \
+            + jnp.dot(h, u, preferred_element_type=jnp.float32)
+        z = lut(sig_t, pre + b_z)
+        h_tilde = lut(tanh_t, pre + b_h)
+        h_new = (zeta * (1.0 - z) + nu) * h_tilde + z * h
+        traj_ref[t] = h_new
+        return h_new
+
+    h = jnp.zeros_like(h_ref)
+    h = jax.lax.fori_loop(0, T, step, h)
+    h_ref[...] = h
+
+
+@functools.partial(jax.jit, static_argnames=("T", "lo", "hi", "interpret"))
+def fastgrnn_window(sig_lut, tanh_lut, x, w_t, u_t, b_z, b_h, scal,
+                    *, T: int, lo: float = -8.0, hi: float = 8.0,
+                    interpret: bool = True):
+    """x: (T, B, Dp); w_t: (Dp, Hp); u_t: (Hp, Hp); b_z/b_h: (Hp,);
+    scal: (2,).  B % B_TILE == 0 (ops.py pads).  Returns (h, traj)."""
+    Tn, B, Dp = x.shape
+    Hp = w_t.shape[1]
+    grid = (B // B_TILE,)
+    return pl.pallas_call(
+        functools.partial(_cell_kernel, T=T, lo=lo, hi=hi),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((sig_lut.shape[0],), lambda b: (0,)),
+            pl.BlockSpec((tanh_lut.shape[0],), lambda b: (0,)),
+            pl.BlockSpec((Tn, B_TILE, Dp), lambda b: (0, b, 0)),
+            pl.BlockSpec((Dp, Hp), lambda b: (0, 0)),
+            pl.BlockSpec((Hp, Hp), lambda b: (0, 0)),
+            pl.BlockSpec((Hp,), lambda b: (0,)),
+            pl.BlockSpec((Hp,), lambda b: (0,)),
+            pl.BlockSpec((2,), lambda b: (0,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((B_TILE, Hp), lambda b: (b, 0)),
+            pl.BlockSpec((Tn, B_TILE, Hp), lambda b: (0, b, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, Hp), jnp.float32),
+            jax.ShapeDtypeStruct((Tn, B, Hp), jnp.float32),
+        ],
+        interpret=interpret,
+    )(sig_lut, tanh_lut, x, w_t, u_t, b_z, b_h, scal)

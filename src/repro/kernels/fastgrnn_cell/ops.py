@@ -1,0 +1,49 @@
+"""jit'd wrapper: FastGRNN params pytree -> padded kernel layout -> run.
+
+Padding to hardware-aligned tiles: H=16, d=3 pads to Hp=Dp=128 lanes; the
+zero lanes are inert (zero weights, zero state).  Low-rank factors are
+pre-multiplied into effective W^T/U^T once per deployment (the MCU code
+does the same factor-order trick at runtime; on TPU the 128x128 effective
+matmul is a single MXU op, so pre-multiplying is strictly better)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import fastgrnn as fg
+from repro.core.lut import make_lut
+from .kernel import fastgrnn_window, B_TILE
+
+HP = 128
+
+
+def _pad2(a, r, c):
+    return jnp.pad(jnp.asarray(a, jnp.float32),
+                   ((0, r - a.shape[0]), (0, c - a.shape[1])))
+
+
+def _pad1(a, n):
+    return jnp.pad(jnp.asarray(a, jnp.float32), (0, n - a.shape[0]))
+
+
+def fastgrnn_window_kernel(params, xs, *, interpret: bool = True):
+    """xs: (T, B, d) -> (h_final (B, H), traj (T, B, H)) via the Pallas
+    kernel, LUT-activated (nearest mode, matching the deployed C engine)."""
+    T, B, d = xs.shape
+    H = params["b_z"].shape[0]
+    W = fg.effective_W(params)      # (H, d)
+    U = fg.effective_U(params)      # (H, H)
+    zeta = 1.0 / (1.0 + np.exp(-float(params["zeta"])))
+    nu = 1.0 / (1.0 + np.exp(-float(params["nu"])))
+
+    bpad = -B % B_TILE
+    xs_p = jnp.pad(jnp.asarray(xs, jnp.float32),
+                   ((0, 0), (0, bpad), (0, HP - d)))
+    h, traj = fastgrnn_window(
+        jnp.asarray(make_lut("sigmoid")), jnp.asarray(make_lut("tanh")),
+        xs_p,
+        _pad2(W.T, HP, HP), _pad2(U.T, HP, HP),
+        _pad1(params["b_z"], HP), _pad1(params["b_h"], HP),
+        jnp.asarray([zeta, nu], jnp.float32),
+        T=T, interpret=interpret)
+    return h[:B, :H], traj[:, :B, :H]

@@ -1,0 +1,19 @@
+"""Pure-jnp oracle for the fused FastGRNN window kernel: the LUT-activated
+cell from core/fastgrnn.py + core/lut.py run over a full window."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core import fastgrnn as fg
+from repro.core.lut import lut_sigmoid, lut_tanh
+
+
+def fastgrnn_window_ref(params, xs, *, lut: bool = True, mode: str = "nearest"):
+    """xs: (T, B, d) -> final hidden (B, H) + trajectory (T, B, H)."""
+    sig = (lambda v: lut_sigmoid(v, mode)) if lut else None
+    tnh = (lambda v: lut_tanh(v, mode)) if lut else None
+    kw = {}
+    if lut:
+        kw = {"sigma": sig, "tanh": tnh}
+    h, traj = fg.run_sequence(params, xs, return_trajectory=True, **kw)
+    return h, traj

@@ -1,0 +1,12 @@
+"""Pure-jnp oracle: dequantize-then-matmul (per-tensor symmetric scale)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def q15_matmul_ref(x, wq, scale, out_dtype=jnp.float32):
+    """x: (M, K) float; wq: (K, N) int8/int16; scale: scalar.
+    Per-tensor scale commutes with the contraction:
+        x @ (wq * s) == s * (x @ wq_as_float)."""
+    w = wq.astype(jnp.float32) * scale
+    return jnp.dot(x.astype(jnp.float32), w).astype(out_dtype)

@@ -1,0 +1,2 @@
+"""Pure-jnp oracle for the SSD scan kernel = models/mamba2.ssd_chunked."""
+from repro.models.mamba2 import ssd_chunked as ssd_scan_ref  # noqa: F401

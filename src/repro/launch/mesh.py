@@ -1,0 +1,47 @@
+"""Production mesh factories.
+
+``make_production_mesh`` is a FUNCTION (not a module-level constant) so
+importing this module never touches jax device state.  Axes:
+
+  * ``pod``   — crosses DCN; pure data parallelism (gradient all-reduce
+                only, compressible via train/grad_compression.py);
+  * ``data``  — within-pod FSDP axis (params/optimizer sharded, per-layer
+                all-gather);
+  * ``model`` — within-pod tensor/expert parallel axis.
+
+Elastic scaling: the pod axis count is a constructor argument; checkpoints
+store full logical arrays so a job can restart on a different pod count
+(see train/checkpoint.py).
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False, num_pods: int = 2):
+    shape = (num_pods, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes,
+                         axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+
+
+def make_host_mesh(data: int | None = None, model: int = 1):
+    """Small mesh over whatever devices exist (tests / single host)."""
+    n = jax.device_count()
+    data = data if data is not None else max(1, n // model)
+    return jax.make_mesh((data, model), ("data", "model"),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+
+
+def batch_axes(mesh) -> tuple[str, ...]:
+    """The mesh axes the global batch is sharded over."""
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def batch_shards(mesh) -> int:
+    import numpy as np
+    return int(np.prod([mesh.shape[a] for a in batch_axes(mesh)]))
+
+
+def tp_size(mesh) -> int:
+    return int(mesh.shape["model"]) if "model" in mesh.axis_names else 1

@@ -1,0 +1,92 @@
+"""Production training launcher.
+
+    python -m repro.launch.train --arch qwen2-1.5b --steps 100 \
+        [--reduced] [--mesh host|16x16|2x16x16] [--grad-compress 8]
+
+On real hardware ``--mesh 16x16``/``2x16x16`` selects the production mesh
+(jax.distributed.initialize is called when JAX_COORDINATOR is set); in
+this CPU container use --reduced --mesh host.  Restart-safe: checkpoints
++ the seekable token stream resume exactly (see train/trainer.py).
+"""
+import argparse
+import os
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--seq", type=int, default=None)
+    ap.add_argument("--global-batch", type=int, default=None)
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--mesh", default="host", choices=["host", "16x16", "2x16x16"])
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--checkpoint-every", type=int, default=50)
+    ap.add_argument("--iht-sparsity", type=float, default=0.0)
+    args = ap.parse_args()
+
+    if os.environ.get("JAX_COORDINATOR"):
+        import jax
+        jax.distributed.initialize()           # multi-host entry point
+
+    import jax
+    import jax.numpy as jnp
+    import repro.configs as C
+    from repro.data import tokens
+    from repro.models import registry
+    from repro.launch import sharding as sh
+    from repro.launch.mesh import make_production_mesh, make_host_mesh
+    from repro.train.optimizer import AdamConfig
+    from repro.train.trainer import Trainer, TrainerConfig
+
+    cfg = C.get(args.arch)
+    if args.reduced:
+        cfg = C.reduced(cfg)
+    seq = args.seq or (64 if args.reduced else 4096)
+    gbatch = args.global_batch or (8 if args.reduced else 256)
+
+    if args.mesh == "host":
+        mesh = make_host_mesh()
+    else:
+        mesh = make_production_mesh(multi_pod=(args.mesh == "2x16x16"))
+
+    acfg = AdamConfig(lr=args.lr, state_dtype=cfg.opt_state_dtype)
+    tcfg = tokens.TokenStreamConfig(vocab_size=cfg.vocab_size, seq_len=seq,
+                                    global_batch=gbatch)
+    step_fn = registry.make_train_step(cfg, acfg,
+                                       mesh=mesh if mesh.devices.size > 1 else None)
+    if mesh.devices.size > 1:
+        aparams = registry.abstract_params(cfg)
+        pspecs = sh.param_pspecs(aparams, mesh)
+        n_p = sh.named(mesh, pspecs)
+        aopt = registry.abstract_opt(cfg, acfg)
+        n_o = sh.named(mesh, sh.opt_pspecs(aopt, pspecs))
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        bspec = {k: NamedSharding(mesh, P(tuple(a for a in ("pod", "data")
+                                                if a in mesh.axis_names), None))
+                 for k in ("tokens", "labels")}
+        step = jax.jit(step_fn, in_shardings=(n_p, n_o, bspec),
+                       out_shardings=(n_p, n_o, None), donate_argnums=(0, 1))
+    else:
+        step = jax.jit(step_fn, donate_argnums=(0, 1))
+
+    def batch_fn(s):
+        return {k: jnp.asarray(v) for k, v in tokens.lm_batch(tcfg, s).items()}
+
+    trainer = Trainer(
+        TrainerConfig(total_steps=args.steps,
+                      checkpoint_every=args.checkpoint_every,
+                      checkpoint_dir=args.ckpt_dir or f"/tmp/repro_{args.arch}",
+                      adam=acfg),
+        init_params_fn=lambda: registry.init(cfg, jax.random.PRNGKey(0)),
+        step_fn=step, batch_fn=batch_fn,
+        on_straggler=lambda s, dt, v: print(f"[straggler] step {s}: {dt:.2f}s"))
+    hist = trainer.run()
+    losses = [h["loss"] for h in hist if "loss" in h]
+    print(f"done: loss {losses[0]:.3f} -> {losses[-1]:.3f} "
+          f"({len(losses)} steps, {trainer.restarts} restarts)")
+
+
+if __name__ == "__main__":
+    main()

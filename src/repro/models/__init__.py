@@ -1,0 +1,1 @@
+from . import layers, attention, moe, mamba2, transformer, baselines  # noqa: F401

@@ -1,0 +1,102 @@
+"""Paper Table IV baselines: MLP (measured), LSTM and GRU cells
+(theoretical parameter counts at H=16, d=3; also runnable for the warm-up
+comparison the paper lists as future work)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+# ---------------------------------------------------------------------------
+# MLP baseline: flatten(128x3=384) -> 32 relu -> 6.
+# Params: 384*32+32 + 32*6+6 = 12,518  (matches Table IV exactly).
+# ---------------------------------------------------------------------------
+
+def mlp_init(key, window: int = 128, d: int = 3, hidden: int = 32, classes: int = 6):
+    k1, k2 = jax.random.split(key)
+    din = window * d
+    return {"w1": 0.1 * jax.random.normal(k1, (din, hidden)),
+            "b1": jnp.zeros((hidden,)),
+            "w2": 0.1 * jax.random.normal(k2, (hidden, classes)),
+            "b2": jnp.zeros((classes,))}
+
+
+def mlp_forward(params, xs):
+    """xs: (T, B, d) window -> (B, C) logits."""
+    x = jnp.transpose(xs, (1, 0, 2)).reshape(xs.shape[1], -1)
+    h = jax.nn.relu(x @ params["w1"] + params["b1"])
+    return h @ params["w2"] + params["b2"]
+
+
+def mlp_loss(params, xs, labels):
+    logits = mlp_forward(params, xs)
+    logp = jax.nn.log_softmax(logits, -1)
+    return -jnp.take_along_axis(logp, labels[:, None], axis=-1).mean()
+
+
+def mlp_param_count(window: int = 128, d: int = 3, hidden: int = 32, classes: int = 6) -> int:
+    return window * d * hidden + hidden + hidden * classes + classes
+
+
+# ---------------------------------------------------------------------------
+# LSTM / GRU cells (H=16, d=3): Table IV theoretical counts 1280 / 960.
+# ---------------------------------------------------------------------------
+
+def lstm_init(key, d: int = 3, H: int = 16):
+    ks = jax.random.split(key, 8)
+    g = lambda k, shape: 0.1 * jax.random.normal(k, shape)
+    p = {}
+    for i, gate in enumerate(("i", "f", "g", "o")):
+        p[f"W_{gate}"] = g(ks[2 * i], (H, d))
+        p[f"U_{gate}"] = g(ks[2 * i + 1], (H, H))
+        p[f"b_{gate}"] = jnp.zeros((H,))
+    return p
+
+
+def lstm_step(p, carry, x):
+    h, c = carry
+    gates = {}
+    for gate in ("i", "f", "g", "o"):
+        gates[gate] = x @ p[f"W_{gate}"].T + h @ p[f"U_{gate}"].T + p[f"b_{gate}"]
+    i, f = jax.nn.sigmoid(gates["i"]), jax.nn.sigmoid(gates["f"])
+    g_, o = jnp.tanh(gates["g"]), jax.nn.sigmoid(gates["o"])
+    c = f * c + i * g_
+    h = o * jnp.tanh(c)
+    return (h, c), h
+
+
+def lstm_param_count(d: int = 3, H: int = 16) -> int:
+    return 4 * (H * d + H * H) + 4 * H   # 1,280 at H=16, d=3
+
+
+def gru_init(key, d: int = 3, H: int = 16):
+    ks = jax.random.split(key, 6)
+    g = lambda k, shape: 0.1 * jax.random.normal(k, shape)
+    p = {}
+    for i, gate in enumerate(("r", "z", "n")):
+        p[f"W_{gate}"] = g(ks[2 * i], (H, d))
+        p[f"U_{gate}"] = g(ks[2 * i + 1], (H, H))
+        p[f"b_{gate}"] = jnp.zeros((H,))
+    return p
+
+
+def gru_step(p, h, x):
+    r = jax.nn.sigmoid(x @ p["W_r"].T + h @ p["U_r"].T + p["b_r"])
+    z = jax.nn.sigmoid(x @ p["W_z"].T + h @ p["U_z"].T + p["b_z"])
+    n = jnp.tanh(x @ p["W_n"].T + r * (h @ p["U_n"].T) + p["b_n"])
+    return (1 - z) * n + z * h, None
+
+
+def gru_param_count(d: int = 3, H: int = 16) -> int:
+    return 3 * (H * d + H * H) + 3 * H   # 960 at H=16, d=3
+
+
+def rnn_run(step_fn, params, xs, carry0):
+    """Generic scan driver returning the (T, ..., H) hidden trajectory."""
+    def body(carry, x):
+        carry, out = step_fn(params, carry, x)
+        h = out if out is not None else (carry[0] if isinstance(carry, tuple) else carry)
+        return carry, h
+    _, traj = jax.lax.scan(body, carry0, xs)
+    return traj

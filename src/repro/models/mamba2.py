@@ -1,0 +1,296 @@
+"""Mamba2 (SSD — state-space duality, arXiv:2405.21060) block.
+
+Chunked SSD formulation (the paper's quadratic-intra / linear-inter split):
+within chunks of length Q the recurrence is evaluated as a masked,
+decay-weighted attention-like matmul (MXU-friendly); across chunks a
+sequential state recurrence carries (H, P, N) states.  This jnp version is
+the oracle for the Pallas kernel in ``repro/kernels/ssd_scan``.
+
+TP note: the reference implementation fuses z/x/B/C/dt into one in_proj of
+width 2*d_inner + 2*G*N + H, which is NOT divisible by tp=16 for the
+assigned configs.  We keep the identical math but store the projection as
+five column-blocks (z, x, B, C, dt) so each output is cleanly shardable:
+z/x/dt on ``model`` (head-aligned), B/C replicated (they are shared across
+heads, G groups only).  A checkpoint converter would simply split the
+fused matrix by columns.  The depthwise conv is split the same way —
+depthwise = per-channel, so sharding follows the channel blocks with no
+extra communication.
+
+Shapes: x (B,S,H,P) heads*headdim = d_inner; dt (B,S,H); A (H,) negative;
+B,C (B,S,G,N) with G groups broadcast over H//G heads each.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from . import layers as L
+
+
+def ssd_chunked(x, dt, A, B, C, *, chunk: int = 256, h0=None,
+                return_cs: bool = False):
+    """Returns (y, final_state[, cs]).  y: (B,S,H,P); state: (B,H,N,P);
+    cs (when requested): (B,S,H) inclusive cumsum of dt*A over the whole
+    span — the sequence-parallel correction needs exp(cs) (see
+    mamba_seq_forward: y(h0) = y(0) + C_i exp(cs_i) h0 by linearity)."""
+    b, s, h, p = x.shape
+    g, n = B.shape[2], B.shape[3]
+    rep = h // g
+    pad = (-s) % chunk
+    if pad:
+        zf = lambda t: jnp.pad(t, [(0, 0), (0, pad)] + [(0, 0)] * (t.ndim - 2))
+        x, dt, B, C = zf(x), zf(dt), zf(B), zf(C)
+    sp = s + pad
+    nc = sp // chunk
+    xc = x.reshape(b, nc, chunk, h, p)
+    dtc = dt.reshape(b, nc, chunk, h).astype(jnp.float32)
+    Bc = B.reshape(b, nc, chunk, g, n)
+    Cc = C.reshape(b, nc, chunk, g, n)
+
+    dA = dtc * A.astype(jnp.float32)                     # (b,nc,Q,h), negative
+    cs = jnp.cumsum(dA, axis=2)                          # inclusive cumsum
+    # intra-chunk decay L[i,j] = exp(cs_i - cs_j) for i >= j.  Clamp the
+    # masked (i < j) entries BEFORE the exp: cs_i - cs_j > 0 there and
+    # exp overflows, which poisons the backward (d/dx where(m, exp(x), 0)
+    # evaluates exp at the masked points -> inf * 0 = NaN).
+    li = cs[:, :, :, None, :] - cs[:, :, None, :, :]     # (b,nc,Q,Q,h)
+    mask = jnp.tril(jnp.ones((chunk, chunk), bool))
+    li = jnp.where(mask[None, None, :, :, None], li, -1e30)
+    Ldec = jnp.exp(li)
+
+    Bh = jnp.repeat(Bc, rep, axis=3)                     # (b,nc,Q,h,n)
+    Ch = jnp.repeat(Cc, rep, axis=3)
+    scores = jnp.einsum("bcihn,bcjhn->bcijh", Ch.astype(jnp.float32),
+                        Bh.astype(jnp.float32))
+    M = scores * Ldec * dtc[:, :, None, :, :]            # weight by dt_j
+    y_diag = jnp.einsum("bcijh,bcjhp->bcihp", M.astype(x.dtype), xc)
+
+    # chunk-final states: S_c[h,n,p] = sum_j exp(cs_last - cs_j) dt_j B_j x_j
+    decay_to_end = jnp.exp(cs[:, :, -1:, :] - cs)        # (b,nc,Q,h)
+    dBx = jnp.einsum("bcjh,bcjhn,bcjhp->bchnp",
+                     (decay_to_end * dtc).astype(jnp.float32),
+                     Bh.astype(jnp.float32), xc.astype(jnp.float32))
+
+    # inter-chunk recurrence (sequential over nc)
+    chunk_decay = jnp.exp(cs[:, :, -1, :])               # (b,nc,h)
+    def step(carry, inp):
+        dec, s_new = inp                                 # (b,h), (b,h,n,p)
+        h_prev = carry
+        h_next = dec[:, :, None, None] * h_prev + s_new
+        return h_next, h_prev                            # emit state BEFORE chunk
+    init = jnp.zeros((b, h, n, p), jnp.float32) if h0 is None else h0.astype(jnp.float32)
+    h_final, h_prevs = jax.lax.scan(
+        step, init, (jnp.moveaxis(chunk_decay, 1, 0), jnp.moveaxis(dBx, 1, 0)))
+    h_prevs = jnp.moveaxis(h_prevs, 0, 1)                # (b,nc,h,n,p)
+
+    # inter-chunk contribution: y_off_i = C_i . (exp(cs_i) * H_prev)
+    y_off = jnp.einsum("bcihn,bcih,bchnp->bcihp", Ch.astype(jnp.float32),
+                       jnp.exp(cs), h_prevs).astype(x.dtype)
+    y = (y_diag + y_off).reshape(b, sp, h, p)[:, :s]
+    if return_cs:
+        # global (span-)cumsum: within-chunk cs + closed prior-chunk sums
+        prior = jnp.cumsum(cs[:, :, -1, :], axis=1) - cs[:, :, -1, :]
+        cs_full = (cs + prior[:, :, None, :]).reshape(b, sp, h)[:, :s]
+        return y, h_final.astype(jnp.float32), cs_full
+    return y, h_final.astype(jnp.float32)
+
+
+def ssd_decode_step(state, x, dt, A, B, C):
+    """One-token SSD update.  state: (B,H,N,P); x: (B,H,P); dt: (B,H);
+    B,C: (B,G,N).  Returns (y (B,H,P), new_state)."""
+    h, g = x.shape[1], B.shape[1]
+    rep = h // g
+    Bh = jnp.repeat(B, rep, axis=1).astype(jnp.float32)   # (B,H,N)
+    Ch = jnp.repeat(C, rep, axis=1).astype(jnp.float32)
+    dtf = dt.astype(jnp.float32)
+    dec = jnp.exp(dtf * A.astype(jnp.float32))            # (B,H)
+    upd = jnp.einsum("bh,bhn,bhp->bhnp", dtf, Bh, x.astype(jnp.float32))
+    new_state = dec[:, :, None, None] * state + upd
+    y = jnp.einsum("bhn,bhnp->bhp", Ch, new_state)
+    return y.astype(x.dtype), new_state
+
+
+# ---------------------------------------------------------------------------
+# Full Mamba2 block: [z|x|B|C|dt]_proj -> conv(x,B,C) -> SSD -> gated norm
+# -> out_proj
+# ---------------------------------------------------------------------------
+
+CONV_W = 4
+
+
+def mamba_dims(cfg):
+    d_inner = 2 * cfg.d_model
+    headdim = cfg.mamba_headdim
+    return d_inner, headdim, d_inner // headdim, cfg.mamba_groups, cfg.ssm_state
+
+
+def mamba_init(key, cfg, dtype=jnp.float32):
+    d_inner, pdim, n_heads, g, n = mamba_dims(cfg)
+    ks = jax.random.split(key, 9)
+    return {
+        "z_proj": L.dense_init(ks[0], cfg.d_model, d_inner, dtype=dtype),
+        "x_proj": L.dense_init(ks[1], cfg.d_model, d_inner, dtype=dtype),
+        "B_proj": L.dense_init(ks[2], cfg.d_model, g * n, dtype=dtype),
+        "C_proj": L.dense_init(ks[3], cfg.d_model, g * n, dtype=dtype),
+        "dt_proj": L.dense_init(ks[4], cfg.d_model, n_heads, dtype=dtype),
+        "conv_x": L.truncated_normal(ks[5], (CONV_W, d_inner), 0.1, dtype),
+        "conv_x_b": jnp.zeros((d_inner,), dtype),
+        "conv_B": L.truncated_normal(ks[6], (CONV_W, g * n), 0.1, dtype),
+        "conv_B_b": jnp.zeros((g * n,), dtype),
+        "conv_C": L.truncated_normal(ks[7], (CONV_W, g * n), 0.1, dtype),
+        "conv_C_b": jnp.zeros((g * n,), dtype),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, n_heads).astype(jnp.float32)),
+        "dt_bias": jnp.zeros((n_heads,), jnp.float32),
+        "D": jnp.ones((n_heads,), jnp.float32),
+        "gn": L.rmsnorm_init(d_inner, dtype),
+        "out_proj": L.dense_init(ks[8], d_inner, cfg.d_model, dtype=dtype),
+    }
+
+
+def _causal_conv(u, w, b):
+    """Depthwise causal conv.  u: (B,S,C); w: (W,C)."""
+    W = w.shape[0]
+    up = jnp.pad(u, ((0, 0), (W - 1, 0), (0, 0)))
+    y = sum(up[:, i:i + u.shape[1], :] * w[i] for i in range(W))
+    return y + b
+
+
+def _projections(p, xin, cfg, compute_dtype):
+    cd = compute_dtype
+    z = L.dense_apply(p["z_proj"], xin, compute_dtype=cd)
+    xr = L.dense_apply(p["x_proj"], xin, compute_dtype=cd)
+    Br = L.dense_apply(p["B_proj"], xin, compute_dtype=cd)
+    Cr = L.dense_apply(p["C_proj"], xin, compute_dtype=cd)
+    dt = L.dense_apply(p["dt_proj"], xin, compute_dtype=cd)
+    return z, xr, Br, Cr, dt
+
+
+def mamba_apply(p, xin, cfg, *, chunk: int = 256, compute_dtype=jnp.bfloat16,
+                ssm_impl=ssd_chunked):
+    """Full-sequence Mamba2 block.  xin: (B,S,D) -> (out, states dict)."""
+    b, s, _ = xin.shape
+    d_inner, pdim, n_heads, g, n = mamba_dims(cfg)
+    cd = compute_dtype
+    z, xr, Br, Cr, dt = _projections(p, xin, cfg, cd)
+    conv_tails = {"x": xr[:, -(CONV_W - 1):], "B": Br[:, -(CONV_W - 1):],
+                  "C": Cr[:, -(CONV_W - 1):]}
+    xr = jax.nn.silu(_causal_conv(xr, p["conv_x"].astype(cd), p["conv_x_b"].astype(cd)))
+    Br = jax.nn.silu(_causal_conv(Br, p["conv_B"].astype(cd), p["conv_B_b"].astype(cd)))
+    Cr = jax.nn.silu(_causal_conv(Cr, p["conv_C"].astype(cd), p["conv_C_b"].astype(cd)))
+    x = xr.reshape(b, s, n_heads, pdim)
+    B = Br.reshape(b, s, g, n)
+    C = Cr.reshape(b, s, g, n)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])
+    A = -jnp.exp(p["A_log"])
+    y, state = ssm_impl(x, dt, A, B, C, chunk=chunk)
+    y = y + p["D"].astype(cd)[None, None, :, None] * x
+    y = y.reshape(b, s, d_inner)
+    y = L.rmsnorm_apply(p["gn"], y * jax.nn.silu(z), cfg.norm_eps)
+    out = L.dense_apply(p["out_proj"], y, compute_dtype=cd)
+    return out, {"ssm": state, "conv": conv_tails}
+
+
+# ---------------------------------------------------------------------------
+# Sequence-parallel (context-parallel) block — runs INSIDE shard_map with
+# the sequence sharded over ``axis`` and ALL weights replicated.
+#
+# Insight: the SSD recurrence is associative in (decay, state), and y is
+# LINEAR in the incoming state h0:  y(h0) = y(0) + C_i * exp(cs_i) * h0.
+# So each device runs its local span with h0 = 0, the (total_decay,
+# final_state) pairs — (B,H) + (B,H,N,P), ~1.6 MB — are all-gathered, each
+# device folds its predecessors locally, and adds the correction term.
+# Replaces the per-layer 400 MB TP all-reduce of (B,S,D) activations with
+# a ~2 MB state exchange (+ a 3-sample conv halo ppermute): the fix for
+# the collective-bound mamba2/zamba2 cells (EXPERIMENTS.md Sec. Perf A2).
+# ---------------------------------------------------------------------------
+
+def _conv_with_context(u, ctx, w, b):
+    """Causal conv where the first W-1 inputs come from the left
+    neighbor's span tail (zeros on device 0 = true sequence start)."""
+    y = _causal_conv(jnp.concatenate([ctx, u], axis=1), w, b)
+    return y[:, ctx.shape[1]:]
+
+
+def mamba_apply_seq(p, xin, cfg, *, axis: str = "model", chunk: int = 256,
+                    compute_dtype=jnp.bfloat16):
+    """Sequence-parallel Mamba2 block body (shard_map context).
+    xin: (B, S_loc, D) local span.  Returns (out, states dict) where the
+    ssm state is the GLOBAL final state (replicated) and conv is the
+    global tail (nonzero only on the last shard; psum-combined)."""
+    b, s, _ = xin.shape
+    d_inner, pdim, n_heads, g, n = mamba_dims(cfg)
+    cd = compute_dtype
+    nsh = jax.lax.axis_size(axis)
+    me = jax.lax.axis_index(axis)
+    perm = [(i, i + 1) for i in range(nsh - 1)]
+
+    z, xr, Br, Cr, dt = _projections(p, xin, cfg, cd)
+    tails = {"x": xr[:, -(CONV_W - 1):], "B": Br[:, -(CONV_W - 1):],
+             "C": Cr[:, -(CONV_W - 1):]}
+
+    def conv_sp(t, wname, bname):
+        ctx = jax.lax.ppermute(t[:, -(CONV_W - 1):], axis, perm)
+        return jax.nn.silu(_conv_with_context(
+            t, ctx, p[wname].astype(cd), p[bname].astype(cd)))
+
+    xr = conv_sp(xr, "conv_x", "conv_x_b")
+    Br = conv_sp(Br, "conv_B", "conv_B_b")
+    Cr = conv_sp(Cr, "conv_C", "conv_C_b")
+    x = xr.reshape(b, s, n_heads, pdim)
+    B = Br.reshape(b, s, g, n)
+    C = Cr.reshape(b, s, g, n)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])
+    A = -jnp.exp(p["A_log"])
+
+    y0, state, cs = ssd_chunked(x, dt, A, B, C, chunk=chunk, return_cs=True)
+    decay_span = jnp.exp(cs[:, -1])                         # (b,h)
+    dg = jax.lax.all_gather(decay_span, axis)               # (nsh,b,h)
+    sg = jax.lax.all_gather(state, axis)                    # (nsh,b,h,n,p)
+    run = jnp.zeros_like(state)
+    h_in = jnp.zeros_like(state)
+    for d in range(nsh):                                    # tiny local fold
+        h_in = jnp.where(me == d, run, h_in)
+        run = dg[d][:, :, None, None] * run + sg[d]
+    Ch = jnp.repeat(C, n_heads // g, axis=2).astype(jnp.float32)
+    y_corr = jnp.einsum("bshn,bsh,bhnp->bshp", Ch, jnp.exp(cs), h_in)
+    y = y0 + y_corr.astype(y0.dtype)
+    y = y + p["D"].astype(cd)[None, None, :, None] * x
+    y = y.reshape(b, s, d_inner)
+    y = L.rmsnorm_apply(p["gn"], y * jax.nn.silu(z), cfg.norm_eps)
+    out = L.dense_apply(p["out_proj"], y, compute_dtype=cd)
+    # global caches: final state = full fold (same on all shards);
+    # conv tail lives on the LAST shard -> mask + psum
+    last = (me == nsh - 1)
+    tails = jax.tree.map(
+        lambda t: jax.lax.psum(jnp.where(last, t, jnp.zeros_like(t)), axis),
+        tails)
+    return out, {"ssm": run, "conv": tails}
+
+
+def mamba_decode(p, xin, conv_state, ssm_state, cfg, *, compute_dtype=jnp.bfloat16):
+    """One-token decode.  xin: (B,1,D); conv_state: dict of (B,W-1,*);
+    ssm_state: (B,H,N,P).  Returns (out (B,1,D), new_conv, new_ssm)."""
+    b = xin.shape[0]
+    d_inner, pdim, n_heads, g, n = mamba_dims(cfg)
+    cd = compute_dtype
+    z, xr, Br, Cr, dt = _projections(p, xin[:, 0], cfg, cd)
+
+    def conv_step(state, new, w, bias):
+        seq = jnp.concatenate([state.astype(cd), new[:, None, :]], axis=1)
+        y = jnp.einsum("bwc,wc->bc", seq, w.astype(cd)) + bias.astype(cd)
+        return jax.nn.silu(y), seq[:, 1:]
+
+    xr, ncx = conv_step(conv_state["x"], xr, p["conv_x"], p["conv_x_b"])
+    Br, ncB = conv_step(conv_state["B"], Br, p["conv_B"], p["conv_B_b"])
+    Cr, ncC = conv_step(conv_state["C"], Cr, p["conv_C"], p["conv_C_b"])
+    x = xr.reshape(b, n_heads, pdim)
+    B = Br.reshape(b, g, n)
+    C = Cr.reshape(b, g, n)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])
+    A = -jnp.exp(p["A_log"])
+    yo, new_ssm = ssd_decode_step(ssm_state, x, dt, A, B, C)
+    yo = yo + p["D"].astype(cd)[None, :, None] * x
+    yo = yo.reshape(b, d_inner)
+    yo = L.rmsnorm_apply(p["gn"], yo * jax.nn.silu(z), cfg.norm_eps)
+    out = L.dense_apply(p["out_proj"], yo, compute_dtype=cd)
+    return out[:, None, :], {"x": ncx, "B": ncB, "C": ncC}, new_ssm

@@ -1,0 +1,174 @@
+"""Registry: per-architecture step functions + abstract input specs.
+
+The dry-run, trainer, and serving engine all consume this one interface:
+
+  * ``abstract_params(cfg)``           — eval_shape of init
+  * ``input_specs(cfg, shape)``        — ShapeDtypeStruct batch stand-ins
+  * ``abstract_cache(cfg, shape)``     — decode-cache stand-ins
+  * ``make_train_step(cfg, acfg)``     — (params, opt, batch) -> ...
+  * ``make_prefill_step(cfg, window)`` — (params, batch) -> (logits, cache)
+  * ``make_decode_step(cfg, window)``  — (params, cache, tokens) -> ...
+
+``long_*`` decode shapes pass ``window=cfg.sliding_window`` so hybrid
+attention stays sub-quadratic per the assignment.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.train import optimizer as opt_mod
+from . import transformer as T
+
+
+def init(cfg: ModelConfig, key):
+    return T.init(cfg, key)
+
+
+def abstract_params(cfg: ModelConfig):
+    return jax.eval_shape(lambda k: T.init(cfg, k), jax.random.PRNGKey(0))
+
+
+def abstract_opt(cfg: ModelConfig, acfg: opt_mod.AdamConfig):
+    ap = abstract_params(cfg)
+    return jax.eval_shape(lambda p: opt_mod.init(p, acfg), ap)
+
+
+def _window_for(cfg: ModelConfig, shape: ShapeConfig):
+    if shape.name == "long_500k" and cfg.family == "hybrid":
+        return cfg.sliding_window
+    return None
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig) -> dict:
+    """Batch ShapeDtypeStructs for one (arch x shape) cell.  Weak-type
+    correct, shardable, no device allocation."""
+    B, S = shape.global_batch, shape.seq_len
+    sds = jax.ShapeDtypeStruct
+    out: dict = {}
+    if shape.kind == "decode":
+        out["tokens"] = sds((B, 1), jnp.int32)
+        return out
+    if cfg.family == "audio":
+        out["frames"] = sds((B, S, cfg.d_model), jnp.bfloat16)
+    else:
+        out["tokens"] = sds((B, S), jnp.int32)
+    if cfg.family == "vlm":
+        out["patch_embeds"] = sds((B, cfg.num_patches, cfg.d_model), jnp.bfloat16)
+    if shape.kind == "train":
+        out["labels"] = sds((B, S), jnp.int32)
+    return out
+
+
+def abstract_cache(cfg: ModelConfig, shape: ShapeConfig):
+    """Decode-cache stand-ins with max_len = shape.seq_len (the assignment:
+    'one new token with a KV cache of seq_len')."""
+    return jax.eval_shape(
+        lambda: T.init_cache(cfg, shape.global_batch, shape.seq_len,
+                             dtype=cfg.cdtype))
+
+
+def make_train_step(cfg: ModelConfig, acfg: opt_mod.AdamConfig, mesh=None,
+                    seq_parallel: bool = False):
+    def train_step(params, opt_state, batch):
+        (loss, metrics), grads = jax.value_and_grad(
+            lambda p: T.train_loss(cfg, p, batch, mesh=mesh,
+                                   seq_parallel=seq_parallel),
+            has_aux=True)(params)
+        params, opt_state, om = opt_mod.update(params, grads, opt_state, acfg)
+        return params, opt_state, {"loss": loss, **metrics, **om}
+    return train_step
+
+
+def make_prefill_step(cfg: ModelConfig, shape: ShapeConfig | None = None,
+                      mesh=None, seq_parallel: bool = False):
+    window = _window_for(cfg, shape) if shape else None
+
+    def prefill_step(params, batch):
+        if cfg.is_encoder:
+            logits, _, _ = T.forward(cfg, params, batch, window=window)
+            return logits
+        return T.prefill(cfg, params, batch, window=window, mesh=mesh,
+                         seq_parallel=seq_parallel)
+    return prefill_step
+
+
+def make_decode_step(cfg: ModelConfig, shape: ShapeConfig | None = None,
+                     mesh=None, splitkv: bool = False):
+    window = _window_for(cfg, shape) if shape else None
+
+    def decode_step(params, cache, tokens):
+        return T.decode_step(cfg, params, cache, tokens, window=window,
+                             mesh=mesh, splitkv=splitkv)
+    return decode_step
+
+
+def abstract_quantized_params(cfg: ModelConfig, bits: int = 8):
+    """(qparams, scales) ShapeDtypeStructs for the L-S-Q serving path:
+    every >=2D float leaf becomes int8/int16 + a per-tensor f32 scale.
+    Decode is HBM-bound on weight reads, so int8 halves the dominant
+    roofline term (EXPERIMENTS.md Sec. Perf C)."""
+    ap = abstract_params(cfg)
+    dt = jnp.int8 if bits == 8 else jnp.int16
+
+    def q(leaf):
+        if leaf.ndim >= 2 and jnp.issubdtype(leaf.dtype, jnp.floating):
+            return jax.ShapeDtypeStruct(leaf.shape, dt)
+        return leaf
+    qp = jax.tree.map(q, ap)
+    scales = jax.tree.map(
+        lambda l: jax.ShapeDtypeStruct((), jnp.float32), ap)
+    return qp, scales
+
+
+def make_decode_step_quantized(cfg: ModelConfig, shape: ShapeConfig | None = None,
+                               bits: int = 8, mesh=None, splitkv: bool = False):
+    """Decode with int-quantized weights: int8/int16 leaves stream from
+    HBM and the convert+scale fuses into the consuming matmuls (the Pallas
+    q15_matmul kernel is the explicit-VMEM-tile version of the same
+    contract)."""
+    from repro.serve.engine import dequantize_params
+    window = _window_for(cfg, shape) if shape else None
+
+    def decode_step(qparams, scales, cache, tokens):
+        params = dequantize_params(qparams, scales)
+        return T.decode_step(cfg, params, cache, tokens, window=window,
+                             mesh=mesh, splitkv=splitkv)
+    return decode_step
+
+
+def step_flops_model(cfg: ModelConfig, shape: ShapeConfig) -> float:
+    """MODEL_FLOPS for the roofline's usefulness ratio:
+    6*N*D (train, dense), 6*N_active*D (MoE), 2*N per decoded token."""
+    n_active = active_param_count(cfg)
+    tokens = shape.global_batch * (1 if shape.kind == "decode" else shape.seq_len)
+    mult = 6.0 if shape.kind == "train" else 2.0
+    return mult * n_active * tokens
+
+
+def param_count(cfg: ModelConfig) -> int:
+    import numpy as np
+    ap = abstract_params(cfg)
+    return int(sum(np.prod(l.shape) for l in jax.tree.leaves(ap)))
+
+
+def active_param_count(cfg: ModelConfig) -> int:
+    """Parameters touched per token (MoE: top_k of num_experts)."""
+    import numpy as np
+    ap = abstract_params(cfg)
+    total = 0
+    flat = jax.tree_util.tree_flatten_with_path(ap)[0]
+    for path, leaf in flat:
+        n = int(np.prod(leaf.shape))
+        key = jax.tree_util.keystr(path)
+        if "moe" in key and "router" not in key:
+            n = n * cfg.top_k // cfg.num_experts
+        if "embed" in key or ("lm_head" in key and leaf.ndim >= 2):
+            # embeddings: lookup is O(d); unembed matmul does count
+            if "embed" in key:
+                continue
+        total += n
+    return total

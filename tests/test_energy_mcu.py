@@ -1,0 +1,86 @@
+"""Energy model (Tables VIII-IX) and MCU latency model (Table VII) —
+every derived number in the paper must fall out of the encoded constants."""
+from repro.core import energy as en
+from repro.core import mcu
+from repro.core.fastgrnn import FastGRNNConfig
+
+CFG = FastGRNNConfig(rank_w=2, rank_u=8)
+
+
+def test_active_power_17_7mw():
+    assert abs(en.MSP430_LUT.p_active_mw - 17.7) < 0.1
+
+
+def test_energy_per_inference_246uj():
+    assert abs(en.LUT_BUILD.e_inference_uj - 246) < 2
+
+
+def test_energy_per_window_31_5mj():
+    assert abs(en.LUT_BUILD.e_window_mj - 31.5) < 0.3
+
+
+def test_no_lut_energy_7440uj():
+    assert abs(en.NO_LUT_BUILD.e_inference_uj - 7440) < 20
+
+
+def test_battery_life_602h_streaming_417h_continuous():
+    assert abs(en.LUT_BUILD.battery_hours(continuous=False) - 602) < 5
+    assert abs(en.LUT_BUILD.battery_hours(continuous=True) - 417) < 3
+
+
+def test_lut_speedup_30_5x():
+    assert abs(en.lut_speedup() - 30.5) < 0.5
+
+
+def test_window_energy_reduction_96_7pct():
+    assert abs(en.window_energy_reduction() - 0.967) < 0.002
+
+
+def test_no_lut_misses_50hz_deadline():
+    assert en.LUT_BUILD.meets_50hz
+    assert not en.NO_LUT_BUILD.meets_50hz
+
+
+# ---- MCU cycle model (Table VII) -----------------------------------------
+
+def test_arduino_latency_9_21ms():
+    t = mcu.step_latency_s(CFG, mcu.ARDUINO, lut=True)
+    assert abs(t * 1e3 - 9.21) < 0.15
+
+
+def test_msp430_latency_13_9ms():
+    t = mcu.step_latency_s(CFG, mcu.MSP430, lut=True)
+    assert abs(t * 1e3 - 13.87) < 0.2
+
+
+def test_msp430_no_lut_421ms():
+    t = mcu.step_latency_s(CFG, mcu.MSP430, lut=False)
+    assert abs(t * 1e3 - 421) < 5
+
+
+def test_arduino_lut_speedup_1_51x():
+    assert abs(mcu.lut_speedup(CFG, mcu.ARDUINO) - 1.51) < 0.05
+
+
+def test_msp430_lut_speedup_30x():
+    assert abs(mcu.lut_speedup(CFG, mcu.MSP430) - 30.4) < 1.0
+
+
+def test_budget_use_46_65_pct():
+    assert abs(mcu.budget_use(CFG, mcu.ARDUINO) - 0.46) < 0.02
+    assert abs(mcu.budget_use(CFG, mcu.MSP430) - 0.69) < 0.05
+
+
+def test_flash_and_sram_budgets():
+    # deployed: 283 nonzero * 2B + 2 KB LUTs << 16 KB Flash
+    assert mcu.flash_bytes(CFG, nonzero_params=283) == 566 + 2048
+    assert mcu.flash_bytes(CFG, nonzero_params=283) < 16 * 1024
+    assert mcu.sram_bytes(CFG) < 512                 # MSP430G2553 SRAM
+
+
+def test_h32_would_still_fit_but_slower():
+    """Model predicts unmeasured configs: H=32 full-rank."""
+    big = FastGRNNConfig(hidden_dim=32)
+    t16 = mcu.step_latency_s(FastGRNNConfig(), mcu.MSP430)
+    t32 = mcu.step_latency_s(big, mcu.MSP430)
+    assert t32 > 2.5 * t16                          # ~4x MACs, 2x acts

@@ -1,0 +1,105 @@
+"""FastGRNN cell: paper Eq. (1)-(4), Table I/IV parameter accounting."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import fastgrnn as fg
+from repro.models import baselines
+
+
+def test_param_count_full_rank_matches_paper_eq4():
+    cfg = fg.FastGRNNConfig()          # H=16, d=3
+    assert cfg.cell_param_count() == 338           # 48 + 256 + 32 + 2
+    assert cfg.head_param_count() == 102           # 16*6 + 6
+    params = fg.init_params(cfg, jax.random.PRNGKey(0))
+    assert fg.count_params(params) == 440          # Table II row 1
+
+
+def test_param_count_low_rank_matches_table2():
+    cfg = fg.FastGRNNConfig(rank_w=2, rank_u=8)
+    assert cfg.cell_param_count() == 328
+    params = fg.init_params(cfg, jax.random.PRNGKey(0))
+    assert fg.count_params(params) == 430          # Table II row 2
+
+
+def test_baseline_param_counts_match_table4():
+    assert baselines.mlp_param_count() == 12_518
+    assert baselines.lstm_param_count() == 1_280
+    assert baselines.gru_param_count() == 960
+
+
+def test_cell_step_matches_manual_equations():
+    cfg = fg.FastGRNNConfig()
+    p = fg.init_params(cfg, jax.random.PRNGKey(1))
+    x = jnp.asarray(np.random.randn(3).astype(np.float32))
+    h = jnp.asarray(np.random.randn(16).astype(np.float32))
+    pre = p["W"] @ x + p["U"] @ h
+    z = jax.nn.sigmoid(pre + p["b_z"])
+    h_t = jnp.tanh(pre + p["b_h"])
+    zeta = jax.nn.sigmoid(p["zeta"])
+    nu = jax.nn.sigmoid(p["nu"])
+    expected = (zeta * (1 - z) + nu) * h_t + z * h
+    got = fg.cell_step(p, h, x)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(expected),
+                               rtol=1e-6, atol=1e-6)
+
+
+def test_low_rank_equals_dense_product():
+    cfg = fg.FastGRNNConfig(rank_w=2, rank_u=8)
+    p = fg.init_params(cfg, jax.random.PRNGKey(2))
+    dense = dict(p)
+    dense["W"] = fg.effective_W(p)
+    dense["U"] = fg.effective_U(p)
+    for k in ("W1", "W2", "U1", "U2"):
+        dense.pop(k)
+    x = jnp.asarray(np.random.randn(4, 3).astype(np.float32))
+    h = jnp.asarray(np.random.randn(4, 16).astype(np.float32))
+    np.testing.assert_allclose(np.asarray(fg.cell_step(p, h, x)),
+                               np.asarray(fg.cell_step(dense, h, x)),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_run_sequence_trajectory_consistent():
+    cfg = fg.FastGRNNConfig()
+    p = fg.init_params(cfg, jax.random.PRNGKey(3))
+    xs = jnp.asarray(np.random.randn(10, 2, 3).astype(np.float32))
+    h_final, traj = fg.run_sequence(p, xs, return_trajectory=True)
+    np.testing.assert_allclose(np.asarray(traj[-1]), np.asarray(h_final))
+    # step-by-step agrees with scan
+    h = jnp.zeros((2, 16))
+    for t in range(10):
+        h = fg.cell_step(p, h, xs[t])
+    np.testing.assert_allclose(np.asarray(h), np.asarray(h_final),
+                               rtol=1e-5, atol=1e-6)
+
+
+def test_loss_decreases_with_training_step():
+    cfg = fg.FastGRNNConfig(rank_w=2, rank_u=8)
+    p = fg.init_params(cfg, jax.random.PRNGKey(4))
+    xs = jnp.asarray(np.random.randn(16, 8, 3).astype(np.float32))
+    ys = jnp.asarray(np.random.randint(0, 6, 8))
+    loss0, grads = jax.value_and_grad(fg.loss_fn)(p, xs, ys)
+    p2 = jax.tree.map(lambda w, g: w - 0.05 * g, p, grads)
+    loss1 = fg.loss_fn(p2, xs, ys)
+    assert float(loss1) < float(loss0)
+
+
+def test_dual_rank_diag_residual():
+    """Paper Sec. VI-E direction 1: U_eff = LowRank(r) + diag(alpha)."""
+    cfg = fg.FastGRNNConfig(rank_w=2, rank_u=4, diag_residual=True)
+    assert cfg.cell_param_count() == 216       # 38 + 128 + 16 + 32 + 2
+    p = fg.init_params(cfg, jax.random.PRNGKey(0))
+    assert "alpha" in p
+    # effective U includes the diagonal
+    u = fg.effective_U(p)
+    np.testing.assert_allclose(np.diag(np.asarray(u)),
+                               np.diag(np.asarray(p["U1"] @ p["U2"].T))
+                               + np.asarray(p["alpha"]), rtol=1e-6)
+    # cell_step consistent with the dense expansion
+    dense = {k: v for k, v in p.items() if k not in ("U1", "U2", "alpha")}
+    dense["U"] = u
+    x = jnp.asarray(np.random.randn(4, 3).astype(np.float32))
+    h = jnp.asarray(np.random.randn(4, 16).astype(np.float32))
+    np.testing.assert_allclose(np.asarray(fg.cell_step(p, h, x)),
+                               np.asarray(fg.cell_step(dense, h, x)),
+                               rtol=1e-5, atol=1e-5)

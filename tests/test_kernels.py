@@ -1,0 +1,124 @@
+"""Per-kernel allclose vs ref.py oracles, swept over shapes and dtypes
+(interpret mode — kernel bodies execute on CPU)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import fastgrnn as fg
+from repro.core.lut import make_lut, lut_eval, _LINEAR_TAILS
+
+
+# ---- lut_act --------------------------------------------------------------
+
+@pytest.mark.parametrize("fn", ["sigmoid", "tanh", "silu", "gelu"])
+@pytest.mark.parametrize("mode", ["nearest", "lerp"])
+@pytest.mark.parametrize("shape", [(33,), (7, 129), (2, 3, 64)])
+def test_lut_act_kernel(fn, mode, shape):
+    from repro.kernels.lut_act.ops import lut_act
+    x = jnp.asarray(np.random.default_rng(0).normal(size=shape) * 5,
+                    jnp.float32)
+    got = lut_act(x, fn, mode=mode)
+    ref = lut_eval(jnp.asarray(make_lut(fn)), x, mode=mode,
+                   linear_tail=(fn in _LINEAR_TAILS))
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
+                               rtol=0, atol=1e-6)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_lut_act_dtypes(dtype):
+    from repro.kernels.lut_act.ops import lut_tanh
+    x = jnp.asarray(np.linspace(-10, 10, 257), dtype)
+    y = lut_tanh(x)
+    assert y.dtype == dtype
+    assert float(jnp.max(jnp.abs(y.astype(jnp.float32)
+                                 - jnp.tanh(x.astype(jnp.float32))))) < 0.05
+
+
+# ---- fastgrnn_cell ---------------------------------------------------------
+
+@pytest.mark.parametrize("low_rank", [False, True])
+@pytest.mark.parametrize("T,B", [(16, 1), (128, 5), (64, 8)])
+def test_fastgrnn_kernel_vs_ref(low_rank, T, B):
+    from repro.kernels.fastgrnn_cell.ops import fastgrnn_window_kernel
+    from repro.kernels.fastgrnn_cell.ref import fastgrnn_window_ref
+    cfg = fg.FastGRNNConfig(rank_w=2 if low_rank else None,
+                            rank_u=8 if low_rank else None)
+    params = fg.init_params(cfg, jax.random.PRNGKey(0))
+    xs = jnp.asarray(np.random.default_rng(1).normal(size=(T, B, 3)),
+                     jnp.float32)
+    h_k, traj_k = fastgrnn_window_kernel(params, xs)
+    h_r, traj_r = fastgrnn_window_ref(params, xs, lut=True, mode="nearest")
+    np.testing.assert_allclose(np.asarray(h_k), np.asarray(h_r),
+                               rtol=0, atol=2e-5)
+    np.testing.assert_allclose(np.asarray(traj_k), np.asarray(traj_r),
+                               rtol=0, atol=2e-5)
+
+
+# ---- q15_matmul ------------------------------------------------------------
+
+@pytest.mark.parametrize("dtype", [jnp.int8, jnp.int16])
+@pytest.mark.parametrize("m,k,n", [(8, 32, 16), (64, 96, 130),
+                                   (200, 256, 128), (1, 128, 256)])
+def test_q15_matmul_kernel(dtype, m, k, n):
+    from repro.kernels.q15_matmul.ops import q15_matmul
+    from repro.kernels.q15_matmul.ref import q15_matmul_ref
+    rng = np.random.default_rng(2)
+    x = jnp.asarray(rng.normal(size=(m, k)), jnp.float32)
+    hi = 120 if dtype == jnp.int8 else 30000
+    wq = jnp.asarray(rng.integers(-hi, hi, (k, n)), dtype)
+    s = 0.0021
+    got = q15_matmul(x, wq, s)
+    ref = q15_matmul_ref(x, wq, s)
+    denom = float(jnp.max(jnp.abs(ref))) + 1e-9
+    assert float(jnp.max(jnp.abs(got - ref))) / denom < 2e-2  # bf16 tiles
+
+
+def test_q15_matmul_batched_lead_dims():
+    from repro.kernels.q15_matmul.ops import q15_matmul
+    rng = np.random.default_rng(3)
+    x = jnp.asarray(rng.normal(size=(2, 5, 64)), jnp.float32)
+    wq = jnp.asarray(rng.integers(-100, 100, (64, 32)), jnp.int8)
+    out = q15_matmul(x, wq, 0.01)
+    assert out.shape == (2, 5, 32)
+
+
+# ---- ssd_scan --------------------------------------------------------------
+
+@pytest.mark.parametrize("b,S,H,P,G,N,chunk", [
+    (1, 32, 2, 8, 1, 8, 8),
+    (2, 80, 4, 8, 2, 16, 16),
+    (2, 100, 4, 16, 4, 8, 32),   # S not a chunk multiple -> padding path
+])
+def test_ssd_scan_kernel(b, S, H, P, G, N, chunk):
+    from repro.kernels.ssd_scan.ops import ssd_scan
+    from repro.kernels.ssd_scan.ref import ssd_scan_ref
+    ks = jax.random.split(jax.random.PRNGKey(4), 5)
+    x = jax.random.normal(ks[0], (b, S, H, P))
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (b, S, H)))
+    A = -jnp.exp(jax.random.normal(ks[2], (H,)))
+    B = jax.random.normal(ks[3], (b, S, G, N))
+    C = jax.random.normal(ks[4], (b, S, G, N))
+    y_k, st_k = ssd_scan(x, dt, A, B, C, chunk=chunk)
+    y_r, st_r = ssd_scan_ref(x, dt, A, B, C, chunk=chunk)
+    np.testing.assert_allclose(np.asarray(y_k), np.asarray(y_r),
+                               rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(st_k), np.asarray(st_r),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_ssd_scan_bf16_inputs():
+    from repro.kernels.ssd_scan.ops import ssd_scan
+    from repro.kernels.ssd_scan.ref import ssd_scan_ref
+    ks = jax.random.split(jax.random.PRNGKey(5), 5)
+    b, S, H, P, G, N = 1, 32, 2, 8, 1, 8
+    x = jax.random.normal(ks[0], (b, S, H, P)).astype(jnp.bfloat16)
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (b, S, H)))
+    A = -jnp.exp(jax.random.normal(ks[2], (H,)))
+    B = jax.random.normal(ks[3], (b, S, G, N)).astype(jnp.bfloat16)
+    C = jax.random.normal(ks[4], (b, S, G, N)).astype(jnp.bfloat16)
+    y_k, _ = ssd_scan(x, dt, A, B, C, chunk=8)
+    y_r, _ = ssd_scan_ref(x, dt, A, B, C, chunk=8)
+    np.testing.assert_allclose(np.asarray(y_k, np.float32),
+                               np.asarray(y_r, np.float32),
+                               rtol=0.1, atol=0.1)

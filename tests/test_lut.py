@@ -1,0 +1,55 @@
+"""LUT activations (paper Sec. III-E, Appendix C)."""
+import math
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import lut
+
+
+def test_table_values_match_appendix_c():
+    t = lut.make_lut("sigmoid")
+    bw = 16.0 / 256
+    for i in [0, 17, 128, 255]:
+        x = -8.0 + (i + 0.5) * bw          # bucket-center sampling
+        assert abs(t[i] - 1 / (1 + math.exp(-x))) < 1e-6
+
+
+def test_saturation_exact_in_tails():
+    """Paper: outside [-8, 8] saturation is 'exact to floating-point
+    precision' for sigma and tanh."""
+    for fn, f in [("sigmoid", lambda x: 1 / (1 + np.exp(-x))), ("tanh", np.tanh)]:
+        t = jnp.asarray(lut.make_lut(fn))
+        for x in [9.0, 20.0, -9.0, -100.0]:
+            got = float(lut.lut_eval(t, jnp.asarray(x)))
+            assert abs(got - f(x)) < 2e-3   # table[0]/[255] vs true tail
+
+
+def test_flash_budget_2kb():
+    assert lut.flash_bytes() == 2048        # paper: 'two tables ... 2 KB'
+
+
+def test_max_error_small_inside_domain():
+    for fn in ("sigmoid", "tanh"):
+        e_near = lut.max_abs_error(fn, "nearest")
+        e_lerp = lut.max_abs_error(fn, "lerp")
+        # nearest-bucket worst case ~ max|f'| * bw/2 (= 0.031 for tanh,
+        # f'(0)=1, bw=1/16); lerp is ~bw^2/8 * max|f''| — 1-2 orders better
+        assert e_near <= 0.04, (fn, e_near)
+        assert e_lerp < e_near / 10         # lerp strictly better
+        assert e_lerp < 5e-4, (fn, e_lerp)
+
+
+def test_linear_tail_functions():
+    x = jnp.asarray([-20.0, 20.0])
+    y = lut.LUTActivations(mode="nearest")("silu", x)
+    assert abs(float(y[0]) - 0.0) < 1e-6
+    assert abs(float(y[1]) - 20.0) < 1e-6
+
+
+def test_monotonicity_nearest():
+    xs = jnp.linspace(-8, 8, 4096)
+    for fn in ("sigmoid", "tanh"):
+        t = jnp.asarray(lut.make_lut(fn))
+        ys = np.asarray(lut.lut_eval(t, xs))
+        assert np.all(np.diff(ys) >= 0)

@@ -1,0 +1,107 @@
+"""Property-based tests (hypothesis) on the system's invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import compression as comp
+from repro.core import quantization as q
+from repro.core import lut, warmup
+from repro.core import fastgrnn as fg
+
+_settings = settings(max_examples=25, deadline=None)
+
+
+@_settings
+@given(rows=st.integers(1, 12), cols=st.integers(1, 12),
+       frac=st.floats(0.0, 1.0), seed=st.integers(0, 1000))
+def test_topk_mask_count_invariant(rows, cols, frac, seed):
+    x = np.random.default_rng(seed).normal(size=(rows, cols)).astype(np.float32)
+    keep = int(round(rows * cols * frac))
+    m = comp.topk_mask(jnp.asarray(x), keep)
+    assert int(m.sum()) == keep
+    # kept values dominate dropped values in magnitude
+    kept = np.abs(x)[np.asarray(m)]
+    dropped = np.abs(x)[~np.asarray(m)]
+    if kept.size and dropped.size:
+        assert kept.min() >= dropped.max() - 1e-6
+
+
+@_settings
+@given(scale=st.floats(1e-3, 100.0), seed=st.integers(0, 1000),
+       bits=st.sampled_from([8, 16]))
+def test_quantize_roundtrip_error_bound(scale, seed, bits):
+    qmax = (1 << (bits - 1)) - 1
+    w = (np.random.default_rng(seed).normal(size=(17,)) * scale).astype(np.float32)
+    qi, s = q.quantize_tensor(jnp.asarray(w), qmax)
+    deq = np.asarray(q.dequantize_tensor(qi, s))
+    assert np.max(np.abs(deq - w)) <= float(s) / 2 * 1.001 + 1e-12
+    assert np.max(np.abs(np.asarray(qi))) <= qmax + 1
+
+
+@_settings
+@given(x=st.floats(-50, 50))
+def test_lut_bounded_and_saturates(x):
+    t = jnp.asarray(lut.make_lut("tanh"))
+    y = float(lut.lut_eval(t, jnp.asarray(x, jnp.float32)))
+    assert -1.0 <= y <= 1.0
+    if abs(x) >= 8:
+        assert abs(y - np.tanh(x)) < 2e-3
+
+
+@_settings
+@given(seed=st.integers(0, 500), T=st.integers(2, 40))
+def test_stabilization_step_invariants(seed, T):
+    preds = np.random.default_rng(seed).integers(0, 3, T)
+    t = warmup.stabilization_step(preds)
+    assert 1 <= t <= T
+    # by definition, everything from t-1 (0-based) onward equals final
+    assert (preds[t - 1:] == preds[-1]).all()
+    # and t is minimal: entry t-2 differs (when t > 1)
+    if t > 1:
+        assert preds[t - 2] != preds[-1]
+
+
+@_settings
+@given(seed=st.integers(0, 100))
+def test_hidden_state_bounded_by_gate_algebra(seed):
+    """|h_t| <= (zeta + nu) * t * 1 + ... : the two-scalar gate bounds the
+    per-step growth of |h| by max(|h_{t-1}|, zeta+nu+|h_{t-1}|) — i.e. h
+    cannot blow up faster than linearly in t."""
+    cfg = fg.FastGRNNConfig()
+    p = fg.init_params(cfg, jax.random.PRNGKey(seed))
+    xs = jnp.asarray(np.random.default_rng(seed).normal(
+        size=(30, 1, 3)).astype(np.float32) * 5)
+    _, traj = fg.run_sequence(p, xs, return_trajectory=True)
+    traj = np.asarray(traj)
+    zeta = float(jax.nn.sigmoid(p["zeta"]))
+    nu = float(jax.nn.sigmoid(p["nu"]))
+    bound = (zeta + nu) * np.arange(1, 31) + 1e-4
+    assert (np.abs(traj[:, 0]).max(-1) <= bound).all()
+
+
+@_settings
+@given(m=st.integers(1, 40), k=st.integers(1, 64), n=st.integers(1, 40),
+       seed=st.integers(0, 100))
+def test_q15_matmul_shape_property(m, k, n, seed):
+    from repro.kernels.q15_matmul.ops import q15_matmul
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.normal(size=(m, k)), jnp.float32)
+    wq = jnp.asarray(rng.integers(-100, 100, (k, n)), jnp.int8)
+    out = q15_matmul(x, wq, 0.01)
+    assert out.shape == (m, n)
+    assert np.isfinite(np.asarray(out)).all()
+
+
+@_settings
+@given(seed=st.integers(0, 50), b=st.integers(1, 3), s=st.integers(1, 33))
+def test_flash_attention_matches_naive(seed, b, s):
+    from repro.models.attention import chunked_attention, attention_scores
+    ks = jax.random.split(jax.random.PRNGKey(seed), 3)
+    q_ = jax.random.normal(ks[0], (b, s, 2, 8))
+    k_ = jax.random.normal(ks[1], (b, s, 2, 8))
+    v_ = jax.random.normal(ks[2], (b, s, 2, 8))
+    ref = attention_scores(q_, k_, v_, causal=True)
+    got = chunked_attention(q_, k_, v_, True, None, 8, 8)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
+                               rtol=2e-3, atol=2e-5)

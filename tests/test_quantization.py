@@ -1,0 +1,60 @@
+"""Q15 PTQ + activation calibration (paper Sec. III-D, Appendix B)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import quantization as q
+from repro.core import fastgrnn as fg
+
+
+def test_scale_formula_appendix_b():
+    w = jnp.asarray([[0.5, -1.3], [0.2, 0.9]])
+    qi, s = q.quantize_tensor(w, q.Q15_MAX)
+    assert abs(float(s) - 1.3 / 32767) < 1e-9
+    assert int(jnp.max(jnp.abs(qi))) == 32767
+
+
+def test_roundtrip_error_bounded_by_half_scale():
+    w = jnp.asarray(np.random.randn(64, 64).astype(np.float32))
+    qi, s = q.quantize_tensor(w, q.Q15_MAX)
+    err = jnp.max(jnp.abs(q.dequantize_tensor(qi, s) - w))
+    assert float(err) <= float(s) / 2 + 1e-9
+
+
+def test_quantize_params_roundtrip_and_bytes():
+    cfg = fg.FastGRNNConfig(rank_w=2, rank_u=8)
+    params = fg.init_params(cfg, jax.random.PRNGKey(0))
+    qp = q.quantize_params(params, q.QuantConfig())
+    deq = qp.dequantize()
+    for k in params:
+        d = float(jnp.max(jnp.abs(deq[k] - params[k])))
+        assert d < 1e-3, k
+    # quantized matrices: W1,W2,U1,U2,head_w = 390 params * 2B
+    assert qp.nbytes() == 390 * 2
+
+
+def test_q7_mode():
+    w = jnp.asarray(np.random.randn(32, 32).astype(np.float32))
+    qi, s = q.quantize_tensor(w, q.Q7_MAX)
+    assert int(jnp.max(jnp.abs(qi))) <= 128
+    err = float(jnp.max(jnp.abs(q.dequantize_tensor(qi, s) - w)))
+    assert err <= float(s) / 2 + 1e-9
+
+
+def test_calibration_headroom():
+    acts = [{"h": jnp.asarray([1.0, -3.0])}, {"h": jnp.asarray([5.0, 0.1])}]
+    scales = q.calibrate_activations(lambda b: b, acts, headroom=0.10)
+    assert abs(scales["h"] - (1.1 * 5.0) / q.Q15_MAX) < 1e-9
+
+
+def test_naive_activation_quant_clips_out_of_range():
+    """The paper's collapse mechanism: |h| ~ 62 >> 1 is unrepresentable in
+    naive Q15 [-1, 1): fake-quant clips it to ~1."""
+    h = jnp.asarray([62.0, -0.5, 0.9])
+    out = q.fake_quant_activation(h, q.NAIVE_ACT_SCALE)
+    assert abs(float(out[0]) - 1.0) < 1e-3          # catastrophically clipped
+    assert abs(float(out[1]) + 0.5) < 1e-4          # in-range preserved
+    # calibrated scale covers the range
+    cal_scale = (1.1 * 62.0) / q.Q15_MAX
+    out2 = q.fake_quant_activation(h, cal_scale)
+    assert abs(float(out2[0]) - 62.0) < 0.01

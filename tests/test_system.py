@@ -1,0 +1,74 @@
+"""End-to-end behaviour: the paper's full pipeline (train -> L -> S -> Q ->
+deterministic deploy -> warm-up characterization) on synthetic HAPT, plus
+the LM-scale trainer loop on a reduced arch."""
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import pipeline as pl, compression as comp
+from repro.core.warmup import characterize
+
+
+def test_har_end_to_end_lsq(trained_har):
+    cfg, params, tr, te = trained_har
+    # trained model beats chance materially
+    pred = pl.predict_fp32(params, te.windows)
+    f1 = pl.macro_f1(te.labels, pred)
+    assert f1 > 0.5, f1
+
+    # sparsify (S stage) and deploy (Q stage)
+    icfg = comp.IHTConfig(target_sparsity=0.5)
+    masks = comp.compute_masks(params, icfg, 0.5)
+    sparse = comp.apply_masks(params, masks)
+    assert comp.deployed_param_count(params, masks) == 283
+    rt = pl.deploy(sparse, tr.windows[:5])
+    qpred = rt.predict_batch(te.windows[:200])
+    fpred = pl.predict_fp32(sparse, te.windows[:200])
+    agree = pl.agreement(qpred, fpred)
+    assert agree > 0.95, agree          # paper: 99.91-100%
+
+
+def test_warmup_characterization_runs(trained_har):
+    cfg, params, tr, te = trained_har
+    rt = pl.deploy(params, tr.windows[:5])
+    preds = []
+    for w in te.windows[:30]:
+        logits, traj = rt.run_window(w, return_trajectory=True)
+        step_logits = traj @ np.asarray(rt._w["head_w"]) + np.asarray(rt._head_b)
+        preds.append(np.argmax(step_logits, axis=-1))
+    stats = characterize(np.stack(preds))
+    assert 1 <= stats.median_samples <= 128
+    assert stats.worst_case <= 128
+    assert stats.iqr_lo <= stats.median_samples <= stats.iqr_hi
+
+
+def test_lm_trainer_smoke(tmp_path):
+    """Reduced qwen2 through the real Trainer: loss falls, checkpoints land."""
+    import repro.configs as C
+    from repro.models import registry
+    from repro.train.trainer import Trainer, TrainerConfig
+    from repro.train.optimizer import AdamConfig
+    from repro.data import tokens
+
+    cfg = C.reduced(C.get("qwen2-1.5b"))
+    tcfg = tokens.TokenStreamConfig(vocab_size=cfg.vocab_size, seq_len=32,
+                                    global_batch=8)
+    acfg = AdamConfig(lr=3e-3, warmup_steps=5)
+    step = jax.jit(registry.make_train_step(cfg, acfg))
+
+    def batch_fn(s):
+        b = tokens.lm_batch(tcfg, s)
+        return {k: jnp.asarray(v) for k, v in b.items()}
+
+    tr = Trainer(
+        TrainerConfig(total_steps=30, checkpoint_every=10, adam=acfg,
+                      checkpoint_dir=str(tmp_path)),
+        init_params_fn=lambda: registry.init(cfg, jax.random.PRNGKey(0)),
+        step_fn=step, batch_fn=batch_fn)
+    hist = tr.run()
+    losses = [h["loss"] for h in hist if "loss" in h]
+    assert len(losses) == 30
+    assert losses[-1] < losses[0]       # it learns the motif structure
+    from repro.train import checkpoint as ck
+    assert ck.latest_step(str(tmp_path)) == 30

@@ -1,0 +1,123 @@
+"""Training substrate: optimizer, checkpointing (+resharding semantics),
+trainer fault tolerance, straggler monitor."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.train import optimizer as opt
+from repro.train import checkpoint as ckpt
+from repro.train.straggler import StragglerMonitor
+from repro.train.trainer import Trainer, TrainerConfig
+
+
+def test_adam_converges_quadratic():
+    cfg = opt.AdamConfig(lr=0.1, warmup_steps=1, weight_decay=0.0)
+    params = {"x": jnp.asarray([5.0, -3.0])}
+    state = opt.init(params, cfg)
+    for _ in range(200):
+        grads = {"x": 2 * params["x"]}
+        params, state, m = opt.update(params, grads, state, cfg)
+    assert float(jnp.max(jnp.abs(params["x"]))) < 0.05
+
+
+def test_adam_bf16_states_still_converge():
+    cfg = opt.AdamConfig(lr=0.1, warmup_steps=1, state_dtype="bfloat16")
+    params = {"x": jnp.asarray([5.0, -3.0])}
+    state = opt.init(params, cfg)
+    assert state["m"]["x"].dtype == jnp.bfloat16
+    for _ in range(200):
+        params, state, _ = opt.update(params, {"x": 2 * params["x"]}, state, cfg)
+    assert float(jnp.max(jnp.abs(params["x"]))) < 0.1
+
+
+def test_grad_clip_reported():
+    cfg = opt.AdamConfig(grad_clip=1.0)
+    params = {"x": jnp.zeros(3)}
+    state = opt.init(params, cfg)
+    _, _, m = opt.update(params, {"x": jnp.asarray([100.0, 0, 0])}, state, cfg)
+    assert float(m["grad_norm"]) > 99
+
+
+def test_checkpoint_roundtrip(tmp_path):
+    tree = {"a": jnp.arange(6).reshape(2, 3).astype(jnp.float32),
+            "b": {"c": jnp.asarray(3)}}
+    d = str(tmp_path)
+    ckpt.save(d, 5, tree, metadata={"next_step": 5})
+    assert ckpt.latest_step(d) == 5
+    out = ckpt.restore(d, 5, jax.tree.map(jnp.zeros_like, tree))
+    np.testing.assert_array_equal(np.asarray(out["a"]), np.asarray(tree["a"]))
+    assert ckpt.read_metadata(d, 5)["next_step"] == 5
+
+
+def test_checkpoint_keep_last(tmp_path):
+    d = str(tmp_path)
+    for s in range(6):
+        ckpt.save(d, s, {"x": jnp.asarray(s)}, keep_last=2)
+    steps = sorted(x for x in os.listdir(d) if x.startswith("step_"))
+    assert len(steps) == 2 and steps[-1] == "step_00000005"
+
+
+def test_checkpoint_shape_mismatch_rejected(tmp_path):
+    d = str(tmp_path)
+    ckpt.save(d, 0, {"x": jnp.zeros((2, 2))})
+    with pytest.raises(ValueError):
+        ckpt.restore(d, 0, {"x": jnp.zeros((3, 3))})
+
+
+def test_straggler_monitor_flags_outlier():
+    m = StragglerMonitor(min_samples=4, abs_floor_s=0.0)
+    for _ in range(20):
+        m.observe(0.1)
+    v = m.observe(0.9)
+    assert v["straggler"]
+    v2 = m.observe(5.0)
+    assert v2["hard_fault"]
+
+
+def _toy_trainer(tmp_path, fault_at=None, total=12):
+    calls = {"n": 0}
+
+    def init_params():
+        return {"w": jnp.zeros(4)}
+
+    def step_fn(params, opt_state, batch):
+        grads = {"w": params["w"] - batch}
+        p, s, m = opt.update(params, grads, opt_state,
+                             opt.AdamConfig(lr=0.2, warmup_steps=1))
+        return p, s, {"loss": jnp.sum(jnp.square(params["w"] - batch))}
+
+    def batch_fn(step):
+        return jnp.full(4, 1.0)
+
+    def fault_hook(step):
+        if fault_at is not None and step == fault_at and calls["n"] == 0:
+            calls["n"] = 1
+            raise RuntimeError("simulated node failure")
+
+    cfg = TrainerConfig(total_steps=total, checkpoint_every=4,
+                        checkpoint_dir=str(tmp_path), max_restarts=2,
+                        adam=opt.AdamConfig(lr=0.2, warmup_steps=1))
+    return Trainer(cfg, init_params_fn=init_params, step_fn=step_fn,
+                   batch_fn=batch_fn, fault_hook=fault_hook)
+
+
+def test_trainer_runs_and_checkpoints(tmp_path):
+    t = _toy_trainer(tmp_path)
+    hist = t.run()
+    steps = [h["step"] for h in hist if "step" in h]
+    assert steps == list(range(12))
+    assert ckpt.latest_step(str(tmp_path)) == 12
+
+
+def test_trainer_fault_restart_resumes_exactly(tmp_path):
+    t = _toy_trainer(tmp_path, fault_at=6)
+    hist = t.run()
+    events = [h for h in hist if h.get("event") == "restart"]
+    assert len(events) == 1
+    steps = [h["step"] for h in hist if "step" in h]
+    # steps 0..5 ran, fault at 6, restart resumes from checkpoint at 4
+    assert steps == list(range(0, 6)) + list(range(4, 12))
+    assert t.restarts == 1

@@ -1,0 +1,71 @@
+"""Warm-up characterization (Sec. VI-A) + data pipelines."""
+import numpy as np
+
+from repro.core import warmup
+from repro.data import hapt, tokens
+
+
+def test_stabilization_step_cases():
+    assert warmup.stabilization_step(np.array([2, 2, 2])) == 1
+    assert warmup.stabilization_step(np.array([0, 1, 2, 2, 2])) == 3
+    assert warmup.stabilization_step(np.array([1, 1, 1, 0])) == 4
+    assert warmup.stabilization_step(np.array([0, 1])) == 2
+
+
+def test_characterize_stats():
+    preds = np.array([[0, 0, 1, 1, 1], [1, 1, 1, 1, 1], [0, 1, 0, 2, 2]])
+    st = warmup.characterize(preds)
+    assert st.worst_case == 4
+    assert st.n_windows == 3
+    assert st.median_samples == 3.0
+    assert abs(st.median_seconds - 3 / 50) < 1e-9
+
+
+def test_hapt_shapes_and_counts():
+    s = hapt.load("val")
+    assert s.windows.shape == (1515, 128, 3)
+    assert s.labels.min() >= 0 and s.labels.max() < 6
+    assert set(np.unique(s.subjects)) <= set(range(22, 26))
+
+
+def test_hapt_subject_disjoint_splits():
+    tr = hapt.load("train", n=300)
+    te = hapt.load("test", n=300)
+    assert not (set(np.unique(tr.subjects)) & set(np.unique(te.subjects)))
+
+
+def test_hapt_deterministic():
+    a = hapt.generate_synthetic("test", seed=0, n=50)
+    b = hapt.generate_synthetic("test", seed=0, n=50)
+    np.testing.assert_array_equal(a.windows, b.windows)
+    np.testing.assert_array_equal(a.labels, b.labels)
+
+
+def test_hapt_classes_distinguishable():
+    """Per-class signal statistics must differ (else the task is vacuous)."""
+    s = hapt.load("train", n=600)
+    stds = [s.windows[s.labels == c][..., 2].std() for c in range(6)]
+    assert max(stds) / (min(stds) + 1e-9) > 2.0     # dynamic vs static
+
+
+def test_token_stream_deterministic_and_seekable():
+    cfg = tokens.TokenStreamConfig(vocab_size=100, seq_len=32, global_batch=8)
+    a = tokens.batch_at(cfg, step=7, shard=2, num_shards=4)
+    b = tokens.batch_at(cfg, step=7, shard=2, num_shards=4)
+    np.testing.assert_array_equal(a, b)
+    c = tokens.batch_at(cfg, step=8, shard=2, num_shards=4)
+    assert not np.array_equal(a, c)
+
+
+def test_token_stream_shard_disjoint():
+    cfg = tokens.TokenStreamConfig(vocab_size=1000, seq_len=64, global_batch=8)
+    a = tokens.batch_at(cfg, step=0, shard=0, num_shards=4)
+    b = tokens.batch_at(cfg, step=0, shard=1, num_shards=4)
+    assert not np.array_equal(a, b)
+    assert a.shape == (2, 65)
+
+
+def test_lm_batch_shift():
+    cfg = tokens.TokenStreamConfig(vocab_size=50, seq_len=16, global_batch=2)
+    batch = tokens.lm_batch(cfg, 0)
+    np.testing.assert_array_equal(batch["tokens"][:, 1:], batch["labels"][:, :-1])
