@@ -20,7 +20,10 @@ import functools
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax.experimental import pallas as pl
+
+from . import qstep
 
 B_TILE = 8
 
@@ -97,3 +100,96 @@ def fastgrnn_window(sig_lut, tanh_lut, x, w_t, u_t, b_z, b_h, scal,
         ],
         interpret=interpret,
     )(sig_lut, tanh_lut, x, w_t, u_t, b_z, b_h, scal)
+
+
+# ---------------------------------------------------------------------------
+# Batched single-step kernel (multi-stream streaming inference)
+# ---------------------------------------------------------------------------
+# One FastGRNN step for a whole batch of independent streams: the serving
+# analogue of a fleet of deployed sensors, each slot carrying its own hidden
+# state.  Unlike the full-window scan above, weights arrive as *raw int16
+# Q15* and are dequantized on use inside the kernel (w = f32(Wq) * scale) —
+# the paper's Appendix-B recipe executed in VMEM, so HBM traffic for the
+# weight stream is halved vs f32 storage.  The body reuses the generic
+# qstep math (fixed ascending-j matvec, nearest-bucket LUT), sliced to the
+# real dims so the op order per stream matches core/qruntime.py exactly;
+# padded lanes never enter the accumulation chain.
+
+
+def _q15_step_kernel(sig_ref, tanh_ref, x_ref, h_ref, mask_ref,
+                     *refs, sw: "qstep.StepWeights", d: int, H: int):
+    """x: (B_TILE, Dp); h: (B_TILE, Hp); mask: (B_TILE,) int32;
+    refs: int16 weight refs (W|W1,W2,U|U1,U2) then b_z, b_h, out."""
+    names = qstep.LOW_RANK_NAMES if sw.low_rank else qstep.FULL_RANK_NAMES
+    w_refs, (bz_ref, bh_ref, out_ref) = refs[:len(names)], refs[len(names):]
+    real = {"W": (H, d), "U": (H, H),
+            "W1": sw.w.get("W1", np.zeros((0, 0))).shape,
+            "W2": sw.w.get("W2", np.zeros((0, 0))).shape,
+            "U1": sw.w.get("U1", np.zeros((0, 0))).shape,
+            "U2": sw.w.get("U2", np.zeros((0, 0))).shape}
+    arrs = {}
+    for n, ref in zip(names, w_refs):
+        r, c = real[n]
+        # dequantize-on-use (Appendix B), sliced to real dims so the
+        # qstep matvec loops never touch a padded column
+        arrs[n] = ref[...][:r, :c].astype(jnp.float32) * np.float32(sw.scales[n])
+    arrs.update(b_z=bz_ref[...][:H], b_h=bh_ref[...][:H],
+                sig_lut=sig_ref[...], tanh_lut=tanh_ref[...])
+
+    x = x_ref[...][:, :d]
+    h = h_ref[...][:, :H]
+    h_new = qstep.step_batched(jnp, arrs, sw, h, x)
+    h_new = jnp.where(mask_ref[...][:, None] != 0, h_new, h)
+    out_ref[...] = jnp.pad(h_new, ((0, 0), (0, out_ref.shape[1] - H)))
+
+
+def make_fastgrnn_step(sw: "qstep.StepWeights", *, hp: int = 128,
+                       interpret: bool = True):
+    """Build the batched single-step callable: pads the int16 weight
+    tensors, biases and LUTs to device layout ONCE (they are deployment
+    constants — this runs on every 50 Hz tick, so per-call re-padding
+    would dominate) and caches one ``pl.pallas_call`` per slot count.
+
+    Returns ``step(x, h, mask) -> h_new``: x (S, Dp), h (S, Hp), mask (S,)
+    int32, S % B_TILE == 0 (ops.py pads).  Lanes >= H of h_new are zero."""
+    d, H = sw.input_dim, sw.hidden_dim
+    names = qstep.LOW_RANK_NAMES if sw.low_rank else qstep.FULL_RANK_NAMES
+
+    def pad2(a):
+        a = np.asarray(a)
+        return jnp.asarray(np.pad(a, ((0, hp - a.shape[0]), (0, hp - a.shape[1]))))
+
+    def pad1(a):
+        a = np.asarray(a, np.float32)
+        return jnp.asarray(np.pad(a, (0, hp - a.shape[0])))
+
+    consts = ([jnp.asarray(sw.sig_lut), jnp.asarray(sw.tanh_lut)],
+              [pad2(sw.q[n]) for n in names],
+              [pad1(sw.b_z), pad1(sw.b_h)])
+    kernel = functools.partial(_q15_step_kernel, sw=sw, d=d, H=H)
+    calls: dict[tuple[int, int], "object"] = {}
+
+    def step(x, h, mask):
+        S, dp = x.shape
+        key = (S, dp)
+        if key not in calls:
+            full = lambda shape: pl.BlockSpec(shape, lambda b: (0,) * len(shape))
+            calls[key] = pl.pallas_call(
+                kernel,
+                grid=(S // B_TILE,),
+                in_specs=[
+                    full((qstep.LUT_SIZE,)), full((qstep.LUT_SIZE,)),
+                    pl.BlockSpec((B_TILE, dp), lambda b: (b, 0)),
+                    pl.BlockSpec((B_TILE, hp), lambda b: (b, 0)),
+                    pl.BlockSpec((B_TILE,), lambda b: (b,)),
+                    *[full((hp, hp)) for _ in names],
+                    full((hp,)), full((hp,)),
+                ],
+                out_specs=pl.BlockSpec((B_TILE, hp), lambda b: (b, 0)),
+                out_shape=jax.ShapeDtypeStruct((S, hp), jnp.float32),
+                interpret=interpret,
+            )
+        luts, w_in, biases = consts
+        return calls[key](*luts, x, h, mask, *w_in, *biases)
+
+    return step

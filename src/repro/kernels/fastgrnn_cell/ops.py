@@ -1,4 +1,12 @@
-"""jit'd wrapper: FastGRNN params pytree -> padded kernel layout -> run.
+"""jit'd wrappers: FastGRNN params pytree -> padded kernel layout -> run.
+
+Two entry points live here:
+
+  * ``fastgrnn_window_kernel`` — the fused full-window scan (training/eval
+    batch path, one kernel launch per 128-sample window);
+  * ``Q15StreamStep`` — the batched *single-step* path for multi-stream
+    streaming inference (serve/streaming.py), stepping thousands of
+    independent hidden states at once from Q15 weights.
 
 Padding to hardware-aligned tiles: H=16, d=3 pads to Hp=Dp=128 lanes; the
 zero lanes are inert (zero weights, zero state).  Low-rank factors are
@@ -7,11 +15,13 @@ does the same factor-order trick at runtime; on TPU the 128x128 effective
 matmul is a single MXU op, so pre-multiplying is strictly better)."""
 from __future__ import annotations
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.core import fastgrnn as fg
 from repro.core.lut import make_lut
+from . import qstep
 from .kernel import fastgrnn_window, B_TILE
 
 HP = 128
@@ -47,3 +57,119 @@ def fastgrnn_window_kernel(params, xs, *, interpret: bool = True):
         jnp.asarray([zeta, nu], jnp.float32),
         T=T, interpret=interpret)
     return h[:B, :H], traj[:, :B, :H]
+
+
+# ---------------------------------------------------------------------------
+# Batched single-step entry point (streaming)
+# ---------------------------------------------------------------------------
+
+class Q15StreamStep:
+    """Batched single-step FastGRNN over Q15 weights: the hot path of the
+    multi-stream streaming engine.  ``step(h, x, active)`` advances every
+    slot whose ``active`` flag is set by one sample; ``head_logits`` maps
+    any subset of slot states to classifier logits (emission time only).
+
+    Backends (selected at construction):
+
+      * ``"exact"``  — vectorized NumPy.  Guaranteed bit-identical per
+        stream to the scalar ``core/qruntime.QRuntime`` reference: the
+        batched ops are the same scalar IEEE-754 f32 ops per row, and NumPy
+        never contracts mul+add into an FMA.  This is the agreement-contract
+        backend (paper contribution (i) at batch scale) and the CPU default.
+      * ``"jit"``    — the same qstep math jit-compiled with XLA.  Faster
+        per tick on accelerators, but XLA's CPU emitter contracts
+        ``a*b + c`` into FMAs (even through ``lax.optimization_barrier``),
+        so hidden states drift ~1e-9/step from the reference; argmax
+        predictions still agree in practice.
+      * ``"pallas"`` — the ``kernel.fastgrnn_step`` Pallas kernel
+        (interpret mode on CPU, compiled on TPU), dequantizing the int16
+        weights on use inside the kernel.
+
+    All backends share the single generic op sequence in ``qstep.py``.
+    """
+
+    BACKENDS = ("exact", "jit", "pallas")
+
+    def __init__(self, qp_or_sw, *, act_scales=None, naive_acts=False,
+                 backend: str = "exact", interpret: bool = True):
+        if backend not in self.BACKENDS:
+            raise ValueError(f"backend must be one of {self.BACKENDS}")
+        if isinstance(qp_or_sw, qstep.StepWeights):
+            self.sw = qp_or_sw
+        else:
+            self.sw = qstep.StepWeights.from_quantized(
+                qp_or_sw, act_scales=act_scales, naive_acts=naive_acts)
+        self.backend = backend
+        self.interpret = interpret
+        self._np_arrs = self.sw.arrays(np)
+        if backend == "exact":
+            self._step = self._step_exact
+        elif backend == "jit":
+            self._jnp_arrs = self.sw.arrays(jnp)
+            self._step = self._build_jit()
+        else:
+            from .kernel import make_fastgrnn_step
+            self._pallas_step = make_fastgrnn_step(
+                self.sw, hp=HP, interpret=interpret)
+            self._step = self._step_pallas
+
+    # -- state management ---------------------------------------------------
+    @property
+    def hidden_dim(self) -> int:
+        return self.sw.hidden_dim
+
+    @property
+    def input_dim(self) -> int:
+        return self.sw.input_dim
+
+    def init_state(self, n_slots: int) -> np.ndarray:
+        return np.zeros((n_slots, self.sw.hidden_dim), np.float32)
+
+    def reset(self, h: np.ndarray, mask: np.ndarray) -> np.ndarray:
+        """Zero the hidden state of every slot whose mask bit is set."""
+        return np.where(np.asarray(mask)[:, None], np.float32(0.0),
+                        np.asarray(h)).astype(np.float32)
+
+    def head_logits(self, h: np.ndarray) -> np.ndarray:
+        """Classifier logits for every slot state, (S, H) -> (S, C), via the
+        fixed-order f32 head matvec (bit-identical to qruntime.run_window)."""
+        return qstep.logits_batched(np, self._np_arrs, self.sw,
+                                    np.asarray(h, np.float32))
+
+    # -- one tick -----------------------------------------------------------
+    def step(self, h, x, active):
+        """h: (S, H) f32, x: (S, d) f32, active: (S,) bool -> h_new (S, H)
+        as a NumPy array.  Slots with ``active=False`` keep their hidden
+        state bit-for-bit.  Logits are NOT computed here — the engine only
+        needs them at emission time; call :meth:`head_logits` on the
+        emitting rows."""
+        return self._step(np.asarray(h, np.float32),
+                          np.asarray(x, np.float32),
+                          np.asarray(active, bool))
+
+    def _step_exact(self, h, x, active):
+        h_new = qstep.step_batched(np, self._np_arrs, self.sw, h, x)
+        return np.where(active[:, None], h_new, h).astype(np.float32)
+
+    def _build_jit(self):
+        arrs, sw = self._jnp_arrs, self.sw
+
+        @jax.jit
+        def f(h, x, active):
+            h_new = qstep.step_batched(jnp, arrs, sw, h, x)
+            return jnp.where(active[:, None], h_new, h)
+
+        return lambda h, x, active: np.asarray(f(h, x, active))
+
+    def _step_pallas(self, h, x, active):
+        S, H = h.shape
+        sp = -S % B_TILE
+        h_p = np.zeros((S + sp, HP), np.float32)
+        h_p[:S, :H] = h
+        x_p = np.zeros((S + sp, HP), np.float32)
+        x_p[:S, :x.shape[1]] = x
+        m_p = np.zeros((S + sp,), np.int32)
+        m_p[:S] = active
+        h_new = self._pallas_step(jnp.asarray(x_p), jnp.asarray(h_p),
+                                  jnp.asarray(m_p))
+        return np.asarray(h_new)[:S, :H]

@@ -1,0 +1,173 @@
+"""Batched single-step Q15 FastGRNN cell math, shared by every backend.
+
+This is the streaming-inference hot path: one FastGRNN step for a whole
+batch of independent streams (one hidden state per slot), written once and
+parameterized over the array namespace ``xp`` so the identical op sequence
+runs as
+
+  * vectorized NumPy        (``xp=numpy`` — the *exact* backend),
+  * eager / jit jax.numpy   (``xp=jax.numpy``),
+  * the Pallas kernel body  (``xp=jax.numpy`` inside ``pl.pallas_call``).
+
+Bit-stability contract (paper Sec. IV-D / Table VI, lifted to batch scale):
+every function here is the batched image of the scalar reference in
+``core/qruntime.py`` — the fixed ascending-j matvec loop, dequantize-on-use
+weights, nearest-bucket LUT activations, and the gate combine are the same
+scalar IEEE-754 float32 ops applied per stream row.  Under NumPy that makes
+each stream bit-identical to ``QRuntime.step``.  Under **jit-compiled** XLA
+CPU it does not: XLA's emitter contracts ``a*b + c`` into an FMA (even
+through ``lax.optimization_barrier`` / select guards, measured drift ~1e-9
+per step), which is why the streaming engine defaults to the NumPy backend
+for the agreement contract and offers the jit/Pallas backends for
+throughput.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.core.lut import make_lut, LUT_SIZE, INPUT_MIN, INPUT_MAX
+from repro.core.quantization import QuantizedParams, Q15_MAX
+
+_INV_BW = LUT_SIZE / (INPUT_MAX - INPUT_MIN)   # exact python float (16.0)
+
+LOW_RANK_NAMES = ("W1", "W2", "U1", "U2")
+FULL_RANK_NAMES = ("W", "U")
+
+
+@dataclasses.dataclass
+class StepWeights:
+    """Deployment-time constants for the batched step, mirroring
+    ``QRuntime.__post_init__``: dequantized f32 weights, raw Q15 tensors +
+    scales (for backends that dequantize on use), float biases, post-sigmoid
+    zeta/nu scalars, and the two activation LUTs."""
+    low_rank: bool
+    w: dict[str, np.ndarray]            # dequantized float32 (incl. head_w)
+    q: dict[str, np.ndarray]            # raw int16 Q15 tensors
+    scales: dict[str, float]            # per-tensor dequant scales
+    b_z: np.ndarray
+    b_h: np.ndarray
+    head_b: np.ndarray
+    zeta: np.float32                    # sigmoid(raw), f32 — as deployed
+    nu: np.float32
+    sig_lut: np.ndarray                 # (256,) f32
+    tanh_lut: np.ndarray
+    act_scales: dict[str, float] | None = None   # calibrated Q15 act storage
+    naive_acts: bool = False                     # naive [-1,1) act storage
+
+    @property
+    def input_dim(self) -> int:
+        return self.w["W2"].shape[0] if self.low_rank else self.w["W"].shape[1]
+
+    @property
+    def hidden_dim(self) -> int:
+        return self.b_z.shape[0]
+
+    @property
+    def num_classes(self) -> int:
+        return self.head_b.shape[0]
+
+    @classmethod
+    def from_quantized(cls, qp: QuantizedParams, *,
+                       act_scales: dict[str, float] | None = None,
+                       naive_acts: bool = False) -> "StepWeights":
+        low_rank = "W1" in qp.q or "W1" in qp.fp
+        names = list(LOW_RANK_NAMES if low_rank else FULL_RANK_NAMES) + ["head_w"]
+        w, q, scales = {}, {}, {}
+        for n in names:
+            qi = np.asarray(qp.q[n], np.int32)
+            s = np.float32(qp.scales[n])
+            q[n] = np.asarray(qp.q[n], np.int16)
+            scales[n] = float(s)
+            w[n] = (qi.astype(np.float32) * s).astype(np.float32)
+        f32 = lambda n: np.asarray(qp.fp[n], np.float32)
+        return cls(
+            low_rank=low_rank, w=w, q=q, scales=scales,
+            b_z=f32("b_z"), b_h=f32("b_h"), head_b=f32("head_b"),
+            zeta=np.float32(1.0 / (1.0 + np.exp(-float(qp.fp["zeta"])))),
+            nu=np.float32(1.0 / (1.0 + np.exp(-float(qp.fp["nu"])))),
+            sig_lut=make_lut("sigmoid"), tanh_lut=make_lut("tanh"),
+            act_scales=dict(act_scales) if act_scales else None,
+            naive_acts=naive_acts,
+        )
+
+    def arrays(self, xp) -> dict[str, "object"]:
+        """All array constants converted into namespace ``xp`` (f32)."""
+        out = {n: xp.asarray(a) for n, a in self.w.items()}
+        out.update(b_z=xp.asarray(self.b_z), b_h=xp.asarray(self.b_h),
+                   head_b=xp.asarray(self.head_b),
+                   sig_lut=xp.asarray(self.sig_lut),
+                   tanh_lut=xp.asarray(self.tanh_lut))
+        return out
+
+    def store_scale(self, name: str) -> np.float32 | None:
+        """Activation-storage scale for ``name`` (Table V modes), or None
+        when the tensor stays FP32 (the deployed configuration)."""
+        if self.naive_acts:
+            return np.float32(1.0 / Q15_MAX)
+        if self.act_scales is not None and name in self.act_scales:
+            return np.float32(self.act_scales[name])
+        return None
+
+
+# ---------------------------------------------------------------------------
+# Generic math (xp = numpy | jax.numpy)
+# ---------------------------------------------------------------------------
+
+def matvec_batched(xp, A, x):
+    """out[b, i] = sum_j A[i, j] * x[b, j], j ascending.
+
+    The batched image of ``qruntime._matvec``: per row the multiply and the
+    accumulate are the same two scalar f32 ops in the same order, so each
+    stream is bit-identical to the scalar loop (under a non-contracting
+    executor; see module docstring).
+    """
+    out = xp.zeros((x.shape[0], A.shape[0]), xp.float32)
+    for j in range(A.shape[1]):
+        out = out + x[:, j:j + 1] * A[:, j][None, :]
+    return out
+
+
+def lut_eval_batched(xp, table, v):
+    """Nearest-bucket LUT over (B, H), identical to qruntime._lut_eval_scalar."""
+    idx = xp.clip(((v - INPUT_MIN) * _INV_BW).astype(xp.int32), 0, LUT_SIZE - 1)
+    y = table[idx]
+    y = xp.where(v >= INPUT_MAX, table[LUT_SIZE - 1], y)
+    y = xp.where(v <= INPUT_MIN, table[0], y)
+    return y.astype(xp.float32)
+
+
+def store_batched(xp, t, scale):
+    """Q15 activation-storage fake-quant (qruntime._store); scale may be None."""
+    if scale is None:
+        return t
+    q = xp.clip(xp.round(t / scale), -Q15_MAX - 1, Q15_MAX)
+    return (q * scale).astype(xp.float32)
+
+
+def step_batched(xp, arrs, sw: StepWeights, h, x):
+    """One batched FastGRNN step.  h: (B, H), x: (B, d) -> h_new (B, H).
+
+    Mirrors ``QRuntime.step`` line for line; ``arrs`` is ``sw.arrays(xp)``.
+    """
+    if sw.low_rank:
+        wx = matvec_batched(xp, arrs["W1"], matvec_batched(xp, arrs["W2"].T, x))
+        uh = matvec_batched(xp, arrs["U1"], matvec_batched(xp, arrs["U2"].T, h))
+    else:
+        wx = matvec_batched(xp, arrs["W"], x)
+        uh = matvec_batched(xp, arrs["U"], h)
+    pre = store_batched(xp, wx + uh, sw.store_scale("pre"))
+    z = lut_eval_batched(xp, arrs["sig_lut"], pre + arrs["b_z"])
+    h_tilde = lut_eval_batched(xp, arrs["tanh_lut"], pre + arrs["b_h"])
+    z = store_batched(xp, z, sw.store_scale("z"))
+    h_tilde = store_batched(xp, h_tilde, sw.store_scale("h_tilde"))
+    h_new = (sw.zeta * (1.0 - z) + sw.nu) * h_tilde + z * h
+    return store_batched(xp, h_new.astype(xp.float32), sw.store_scale("h"))
+
+
+def logits_batched(xp, arrs, sw: StepWeights, h):
+    """Classifier head, the batched image of ``qruntime.run_window``'s
+    ``_matvec(head_w.T, h) + head_b`` (+ optional Q15 logit storage)."""
+    out = matvec_batched(xp, arrs["head_w"].T, h)
+    return store_batched(xp, out + arrs["head_b"], sw.store_scale("logits"))

@@ -17,3 +17,24 @@ def fastgrnn_window_ref(params, xs, *, lut: bool = True, mode: str = "nearest"):
         kw = {"sigma": sig, "tanh": tnh}
     h, traj = fg.run_sequence(params, xs, return_trajectory=True, **kw)
     return h, traj
+
+
+def q15_step_batched_ref(qp, h, x, *, act_scales=None, naive_acts=False):
+    """Scalar-loop oracle for the batched Q15 single step: one
+    ``core/qruntime.QRuntime.step`` call per stream row.  h: (S, H),
+    x: (S, d) -> (h_new (S, H), logits (S, C)).  This IS the paper's
+    C-equivalent reference, so the exact backend must match it bit-for-bit.
+    """
+    import numpy as np
+
+    from repro.core.qruntime import QRuntime, _matvec
+
+    rt = QRuntime(qp, act_scales=act_scales, naive_acts=naive_acts)
+    h = np.asarray(h, np.float32)
+    h_new = np.stack([rt.step(h[b], np.asarray(x[b], np.float32))
+                      for b in range(h.shape[0])])
+    logits = np.stack([
+        rt._store("logits",
+                  _matvec(rt._w["head_w"].T, h_new[b]) + rt._head_b)
+        for b in range(h.shape[0])])
+    return h_new, logits

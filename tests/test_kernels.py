@@ -55,6 +55,55 @@ def test_fastgrnn_kernel_vs_ref(low_rank, T, B):
                                rtol=0, atol=2e-5)
 
 
+# ---- fastgrnn_cell: batched single step (streaming) ------------------------
+
+@pytest.mark.parametrize("low_rank", [False, True])
+@pytest.mark.parametrize("backend", ["exact", "jit", "pallas"])
+def test_q15_step_batched_vs_scalar_oracle(low_rank, backend):
+    from repro.core.quantization import quantize_params, QuantConfig
+    from repro.kernels.fastgrnn_cell.ops import Q15StreamStep
+    from repro.kernels.fastgrnn_cell.ref import q15_step_batched_ref
+    cfg = fg.FastGRNNConfig(rank_w=2 if low_rank else None,
+                            rank_u=8 if low_rank else None)
+    qp = quantize_params(fg.init_params(cfg, jax.random.PRNGKey(0)),
+                         QuantConfig())
+    rng = np.random.default_rng(5)
+    S = 24
+    h = (rng.normal(size=(S, 16)) * 0.4).astype(np.float32)
+    x = rng.normal(size=(S, 3)).astype(np.float32)
+    active = np.ones(S, bool)
+    k = Q15StreamStep(qp, backend=backend)
+    h_new = k.step(h, x, active)
+    logits = k.head_logits(h_new)
+    h_ref, log_ref = q15_step_batched_ref(qp, h, x)
+    if backend == "exact":  # bit-identical to the scalar C-equivalent path
+        np.testing.assert_array_equal(h_new.view(np.int32),
+                                      h_ref.view(np.int32))
+        np.testing.assert_array_equal(logits.view(np.int32),
+                                      log_ref.view(np.int32))
+    else:  # XLA contracts mul+add into FMA: allclose, not bitwise
+        np.testing.assert_allclose(h_new, h_ref, rtol=0, atol=1e-5)
+        np.testing.assert_allclose(logits, log_ref, rtol=0, atol=1e-5)
+
+
+def test_q15_step_inactive_slots_hold_state():
+    from repro.core.quantization import quantize_params, QuantConfig
+    from repro.kernels.fastgrnn_cell.ops import Q15StreamStep
+    cfg = fg.FastGRNNConfig(rank_w=2, rank_u=8)
+    qp = quantize_params(fg.init_params(cfg, jax.random.PRNGKey(0)),
+                         QuantConfig())
+    rng = np.random.default_rng(6)
+    h = (rng.normal(size=(8, 16)) * 0.4).astype(np.float32)
+    x = rng.normal(size=(8, 3)).astype(np.float32)
+    active = np.zeros(8, bool)
+    active[::2] = True
+    k = Q15StreamStep(qp)
+    h_new = k.step(h, x, active)
+    np.testing.assert_array_equal(h_new[1::2].view(np.int32),
+                                  h[1::2].view(np.int32))
+    assert not np.array_equal(h_new[::2], h[::2])
+
+
 # ---- q15_matmul ------------------------------------------------------------
 
 @pytest.mark.parametrize("dtype", [jnp.int8, jnp.int16])

@@ -15,10 +15,15 @@ def test_scale_formula_appendix_b():
 
 
 def test_roundtrip_error_bounded_by_half_scale():
-    w = jnp.asarray(np.random.randn(64, 64).astype(np.float32))
+    # seeded: the bound sits exactly at the rounding boundary, so an
+    # unseeded draw makes this test flaky.  The slack must be eps-scaled:
+    # w/s and q*s are float32 ops, so |deq - w| <= s/2 + O(eps32 * |w|).
+    w = jnp.asarray(np.random.default_rng(0).standard_normal((64, 64)),
+                    jnp.float32)
     qi, s = q.quantize_tensor(w, q.Q15_MAX)
     err = jnp.max(jnp.abs(q.dequantize_tensor(qi, s) - w))
-    assert float(err) <= float(s) / 2 + 1e-9
+    slack = 4 * np.finfo(np.float32).eps * float(jnp.max(jnp.abs(w)))
+    assert float(err) <= float(s) / 2 + slack
 
 
 def test_quantize_params_roundtrip_and_bytes():

@@ -1,0 +1,227 @@
+"""Multi-stream streaming engine: slot-based continuous batching over the
+batched Q15 single-step kernel, with the paper's bit-exactness contract
+(Sec. IV-D / Table VI) lifted to batch scale — every stream must match the
+scalar C-equivalent ``core/qruntime.QRuntime`` bit for bit."""
+import jax
+import numpy as np
+import pytest
+
+from repro.core import fastgrnn as fg
+from repro.core.qruntime import QRuntime, calibrate
+from repro.core.quantization import quantize_params, QuantConfig
+from repro.data import hapt
+from repro.serve.streaming import (StreamingEngine, StreamingConfig,
+                                   classify_windows)
+
+
+def _model(low_rank=True, seed=0):
+    cfg = fg.FastGRNNConfig(rank_w=2 if low_rank else None,
+                            rank_u=8 if low_rank else None)
+    params = fg.init_params(cfg, jax.random.PRNGKey(seed))
+    return quantize_params(params, QuantConfig())
+
+
+@pytest.fixture(scope="module")
+def qp():
+    return _model()
+
+
+@pytest.fixture(scope="module")
+def windows():
+    return hapt.load("test", n=1100).windows
+
+
+# ---------------------------------------------------------------------------
+# Acceptance: >= 1024 concurrent streams, bit-identical to the scalar path
+# ---------------------------------------------------------------------------
+
+def test_1024_concurrent_streams_bit_identical(qp, windows):
+    w = windows[:1024]
+    eng = StreamingEngine(qp, StreamingConfig(max_slots=1024))
+    for i in range(1024):
+        eng.attach(f"s{i}", w[i], total_steps=len(w[i]))
+    assert eng.n_active == 1024              # all resident at once
+    events = eng.drain()
+    by_id = {e.stream_id: e for e in events}
+    assert len(by_id) == 1024
+
+    rt = QRuntime(qp)
+    ref_logits = np.stack([rt.run_window(x) for x in w])
+    got_logits = np.stack([by_id[f"s{i}"].logits for i in range(1024)])
+    # bit-identical logits -> bit-identical predictions (the paper's
+    # cross-platform agreement contract at batch scale)
+    np.testing.assert_array_equal(got_logits.view(np.int32),
+                                  ref_logits.view(np.int32))
+    got_pred = np.array([by_id[f"s{i}"].prediction for i in range(1024)])
+    np.testing.assert_array_equal(got_pred, np.argmax(ref_logits, axis=-1))
+    assert eng.stats()["stream_steps"] == 1024 * 128
+
+
+def test_full_rank_bit_identical(windows):
+    qp = _model(low_rank=False)
+    w = windows[:40]
+    eng = StreamingEngine(qp, StreamingConfig(max_slots=40))
+    preds = classify_windows(eng, w)
+    np.testing.assert_array_equal(preds, QRuntime(qp).predict_batch(w))
+
+
+# ---------------------------------------------------------------------------
+# Continuous batching: slot recycling through the pending queue
+# ---------------------------------------------------------------------------
+
+def test_slot_recycling_pending_queue(qp, windows):
+    w = windows[:96]
+    eng = StreamingEngine(qp, StreamingConfig(max_slots=32))
+    statuses = [eng.attach(f"s{i}", w[i], total_steps=128) for i in range(96)]
+    assert statuses.count("active") == 32 and statuses.count("pending") == 64
+    events = eng.drain()
+    preds = {e.stream_id: e.prediction for e in events}
+    ref = QRuntime(qp).predict_batch(w)
+    np.testing.assert_array_equal(
+        np.array([preds[f"s{i}"] for i in range(96)]), ref)
+    st = eng.stats()
+    assert st["peak_active"] == 32           # never exceeded the slot budget
+    assert st["completed"] == 96             # every queued stream finished
+    assert st["ticks"] == 3 * 128            # 3 generations of 32 windows
+
+
+def test_attach_respects_pending_fifo(qp, windows):
+    """A new attach must not jump the queue when a slot frees up while
+    earlier streams are still pending."""
+    eng = StreamingEngine(qp, StreamingConfig(max_slots=1))
+    eng.attach("a", windows[0], total_steps=128)
+    assert eng.attach("b", windows[1], total_steps=128) == "pending"
+    for _ in range(128):
+        eng.step()                       # "a" finishes, slot frees
+    assert eng.attach("c", windows[2], total_steps=128) == "pending"
+    eng.step()                           # admission happens at tick start
+    assert eng._sessions["b"].slot >= 0  # b (FIFO head) got the slot
+    assert eng._sessions["c"].slot == -1
+
+
+def test_attach_beyond_slots_is_pending_until_free(qp, windows):
+    eng = StreamingEngine(qp, StreamingConfig(max_slots=2))
+    assert eng.attach("a", windows[0], total_steps=128) == "active"
+    assert eng.attach("b", windows[1], total_steps=128) == "active"
+    assert eng.attach("c", windows[2], total_steps=128) == "pending"
+    assert (eng.n_active, eng.n_pending) == (2, 1)
+    eng.drain()
+    assert (eng.n_active, eng.n_pending) == (0, 0)
+
+
+# ---------------------------------------------------------------------------
+# Session lifecycle
+# ---------------------------------------------------------------------------
+
+def test_detach_midwindow_emits_partial_final(qp, windows):
+    eng = StreamingEngine(qp, StreamingConfig(max_slots=4))
+    eng.attach("s", windows[0][:50])
+    eng.drain()
+    ev = eng.detach("s")
+    assert ev is not None and ev.kind == "final"
+    assert ev.step == 50 and ev.window_step == 50
+    assert not ev.warm                        # below the 74-sample warm-up
+    # the partial-window logits equal the scalar trajectory at t=50
+    rt = QRuntime(qp)
+    h = np.zeros(16, np.float32)
+    for t in range(50):
+        h = rt.step(h, windows[0][t])
+    from repro.core.qruntime import _matvec
+    ref = _matvec(rt._w["head_w"].T, h) + rt._head_b
+    np.testing.assert_array_equal(ev.logits.view(np.int32), ref.view(np.int32))
+
+
+def test_idle_slots_hold_state_bit_for_bit(qp, windows):
+    """A stream fed in chunks with idle ticks in between must be
+    indistinguishable from an uninterrupted replay."""
+    eng = StreamingEngine(qp, StreamingConfig(max_slots=4))
+    eng.attach("s", windows[0][:30], total_steps=128)
+    eng.attach("busy", windows[1], total_steps=128)  # keeps ticks running
+    for _ in range(70):                      # 30 real steps + 40 idle ticks
+        eng.step()
+    eng.feed("s", windows[0][30:])
+    events = eng.drain()
+    ev = [e for e in events if e.stream_id == "s"][0]
+    ref = QRuntime(qp).run_window(windows[0])
+    np.testing.assert_array_equal(ev.logits.view(np.int32), ref.view(np.int32))
+
+
+def test_warmup_counter_and_flags(qp, windows):
+    cfgs = StreamingConfig(max_slots=2, warmup_samples=74)
+    eng = StreamingEngine(qp, cfgs)
+    eng.attach("cold", windows[0][:40], total_steps=40)
+    eng.attach("warmish", windows[1], total_steps=128)
+    events = eng.drain()
+    cold = [e for e in events if e.stream_id == "cold"][0]
+    warm = [e for e in events if e.stream_id == "warmish"][0]
+    assert cold.kind == "final" and cold.step == 40 and not cold.warm
+    assert warm.kind == "window" and warm.step == 128 and warm.warm
+
+
+def test_multi_window_stream_tumbling(qp, windows):
+    """An open-ended stream emits one window event per 128 samples; with
+    reset_on_emit each window matches an independent scalar window."""
+    eng = StreamingEngine(qp, StreamingConfig(max_slots=2))
+    eng.attach("s")
+    for k in range(3):
+        eng.feed("s", windows[k])
+    events = eng.drain()
+    assert [e.kind for e in events] == ["window"] * 3
+    assert [e.step for e in events] == [128, 256, 384]
+    rt = QRuntime(qp)
+    for k, e in enumerate(events):
+        np.testing.assert_array_equal(
+            e.logits.view(np.int32), rt.run_window(windows[k]).view(np.int32))
+    eng.detach("s")
+    assert eng.n_active == 0
+
+
+def test_duplicate_attach_rejected(qp):
+    eng = StreamingEngine(qp, StreamingConfig(max_slots=2))
+    eng.attach("s")
+    with pytest.raises(ValueError):
+        eng.attach("s")
+
+
+# ---------------------------------------------------------------------------
+# Activation-storage modes (Table V) ride through the batched path
+# ---------------------------------------------------------------------------
+
+def test_calibrated_act_quant_matches_scalar(qp, windows):
+    rt = QRuntime(qp)
+    scales = calibrate(rt, windows[:5])
+    eng = StreamingEngine(qp, StreamingConfig(max_slots=8), act_scales=scales)
+    preds = classify_windows(eng, windows[:8])
+    ref = QRuntime(qp, act_scales=scales).predict_batch(windows[:8])
+    np.testing.assert_array_equal(preds, ref)
+
+
+def test_naive_act_quant_matches_scalar(qp, windows):
+    eng = StreamingEngine(qp, StreamingConfig(max_slots=8), naive_acts=True)
+    preds = classify_windows(eng, windows[:8])
+    ref = QRuntime(qp, naive_acts=True).predict_batch(windows[:8])
+    np.testing.assert_array_equal(preds, ref)
+
+
+# ---------------------------------------------------------------------------
+# Fast backends: same predictions, relaxed bit contract
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("backend", ["jit", "pallas"])
+def test_fast_backends_agree_on_predictions(qp, windows, backend):
+    n = 48 if backend == "jit" else 16
+    eng = StreamingEngine(
+        qp, StreamingConfig(max_slots=16, backend=backend))
+    preds = classify_windows(eng, windows[:n])
+    ref = QRuntime(qp).predict_batch(windows[:n])
+    assert float(np.mean(preds == ref)) == 1.0
+
+
+def test_float_params_quantized_on_entry(windows):
+    """The engine accepts a float param pytree and applies Appendix-B PTQ."""
+    cfg = fg.FastGRNNConfig(rank_w=2, rank_u=8)
+    params = fg.init_params(cfg, jax.random.PRNGKey(1))
+    eng = StreamingEngine(params, StreamingConfig(max_slots=4))
+    preds = classify_windows(eng, windows[:4])
+    qp = quantize_params(params, QuantConfig())
+    np.testing.assert_array_equal(preds, QRuntime(qp).predict_batch(windows[:4]))
