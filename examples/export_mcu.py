@@ -1,0 +1,101 @@
+"""Export a calibrated FastGRNN to a deployable MCU artifact, end to end.
+
+    PYTHONPATH=src python examples/export_mcu.py [--outdir export_out]
+        [--trained] [--windows 64]
+
+Pipeline (the paper's Fig. 1 deployment half, now executable):
+
+  1. model     — low-rank FastGRNN (H=16, r_w=2, r_u=8) + Q15 PTQ
+                 (random-init by default; ``--trained`` trains first);
+  2. calibrate — Sec. III-D deploy calibration (input, low-rank
+                 intermediates, pre-activation, hidden, logit scales);
+  3. pack      — deterministic versioned weight image (``model.fgrn``),
+                 size-audited against the AVR + MSP430 budgets;
+  4. emit      — C translation units for all three targets x both
+                 engines (float = the paper's deployed arithmetic,
+                 int = the multiplier-less pure-integer path);
+  5. verify    — compile the host target with cc and check parity on a
+                 window batch: float C bit-identical to the oracle,
+                 int C bit-identical to the qvm emulator.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import tempfile
+
+import numpy as np
+
+from repro.data import hapt
+from repro.deploy import emit_c, verify
+from repro.deploy.goldens import build_reference_model
+from repro.deploy.image import audit_platforms, export_model, size_report
+from repro.deploy.qvm import QVM
+from repro.core.qruntime import QRuntime, calibrate_deploy
+from repro.core.quantization import QuantConfig, quantize_params
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--outdir", default="export_out")
+    ap.add_argument("--trained", action="store_true",
+                    help="train the pinned parity-protocol model first")
+    ap.add_argument("--windows", type=int, default=64,
+                    help="parity-check windows")
+    args = ap.parse_args()
+
+    # 1+2: model + deploy calibration -> packed image
+    if args.trained:
+        params, calib = verify.protocol_model()
+        qp = quantize_params(params, QuantConfig())
+        act_scales = calibrate_deploy(QRuntime(qp), calib)
+        from repro.deploy.image import build_image
+        img = build_image(qp, act_scales)
+    else:
+        qp, act_scales, img = build_reference_model(seed=0)
+
+    os.makedirs(args.outdir, exist_ok=True)
+    img2, blob = export_model(qp, act_scales,
+                              os.path.join(args.outdir, "model.fgrn"))
+    assert img2.to_bytes() == img.to_bytes()
+    print(f"packed image: {len(blob)} bytes -> {args.outdir}/model.fgrn")
+    rep = size_report(img)
+    print(f"  weights {rep['weight_bytes']} B (paper class: 566 B), "
+          f"LUTs f32/int16 {rep['lut_bytes']['float_engine']}/"
+          f"{rep['lut_bytes']['int_engine']} B")
+
+    # 3: budget audit (raises if the image cannot be flashed)
+    for engine in ("float", "int"):
+        audit = audit_platforms(img, ("avr", "msp430"), engine=engine)
+        for key, a in audit.items():
+            print(f"  [{engine:5s}] {key:6s}: flash {a['image_bytes']}/"
+                  f"{a['flash_capacity'] - a['code_reserve']} B, "
+                  f"sram {a['sram_needed']}/{a['sram_capacity']} B  OK")
+
+    # 4: emit C for every target x engine
+    for target in ("avr", "msp430", "host"):
+        for engine in ("float", "int"):
+            d = os.path.join(args.outdir, target, engine)
+            paths = emit_c.write_sources(img, d, target=target, engine=engine)
+            print(f"  emitted {target}/{engine}: "
+                  f"{', '.join(os.path.basename(p) for p in paths)}")
+
+    # 5: host parity
+    if emit_c.find_cc() is None:
+        print("no C compiler on PATH — skipping the compile+parity check")
+        return
+    windows = hapt.load("test", n=args.windows).windows
+    report = verify.run_parity(img, qp, windows, use_fp32=False)
+    print("parity over", report["n_windows"], "windows:")
+    for k, v in report["bitwise"].items():
+        print(f"  bitwise {k}: {'OK' if v else 'MISMATCH'}")
+    for k, v in report["pairwise"].items():
+        print(f"  argmax {k}: {v['agree']:.4f}")
+    with open(os.path.join(args.outdir, "parity.json"), "w") as f:
+        json.dump(report, f, indent=2)
+    print(f"wrote {args.outdir}/parity.json")
+
+
+if __name__ == "__main__":
+    main()

@@ -119,6 +119,21 @@ def lut_tanh(x: jax.Array, mode: str = "nearest") -> jax.Array:
     return lut_eval(jnp.asarray(make_lut("tanh")), x, mode=mode)
 
 
+def make_lut_q15(fn: str, size: int = LUT_SIZE, lo: float = INPUT_MIN,
+                 hi: float = INPUT_MAX) -> np.ndarray:
+    """Bucket-center table quantized to int16 Q15 (value = q / 32767).
+
+    This is the storage format of the pure-integer deployment path
+    (repro/deploy): sigma/tanh are bounded by 1, so the unit Q15 scale is
+    exact and the two tables shrink from 2 KB (f32) to 1 KB of flash.
+    Only valid for generators bounded by [-1, 1].
+    """
+    if fn in _LINEAR_TAILS:
+        raise ValueError(f"{fn!r} is unbounded; Q15 unit-scale LUT needs |f|<=1")
+    f = make_lut(fn, size, lo, hi).astype(np.float64)
+    return np.clip(np.round(f * 32767.0), -32768, 32767).astype(np.int16)
+
+
 def flash_bytes(n_tables: int = 2, size: int = LUT_SIZE, itemsize: int = 4) -> int:
     """Paper: 'The two tables together occupy 2 KB of Flash'."""
     return n_tables * size * itemsize

@@ -47,6 +47,75 @@ MSP430 = PlatformCosts("MSP430G2553",
                        c_mac=548.0, c_act_sw=203_765.0, c_act_lut=200.0, c_fixed=2000.0)
 
 
+# ---------------------------------------------------------------------------
+# Deployment platform profiles (paper Table I): memory capacities and ISA
+# facts the export compiler (repro/deploy) audits a packed weight image
+# against.  ``flash_capacity`` / ``sram_capacity`` are the physical part
+# limits; the image + runtime working set must fit with code headroom.
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class PlatformProfile:
+    key: str                      # export-target key ("avr" | "msp430" | "host")
+    name: str
+    costs: PlatformCosts | None
+    flash_capacity: int           # bytes of program flash
+    sram_capacity: int            # bytes of data RAM
+    has_multiplier: bool          # MSP430G2553 has no HW multiply (paper V-G)
+    word_bits: int
+    # fraction of flash reserved for code/runtime (not weights/LUTs); the
+    # paper's fastgrnn.cpp translation unit is ~2-6 KB of code per target.
+    code_reserve: int = 6 * 1024
+
+
+AVR_PROFILE = PlatformProfile(
+    key="avr", name="Arduino Uno R3 (ATmega328P)", costs=ARDUINO,
+    flash_capacity=32 * 1024, sram_capacity=2 * 1024,
+    has_multiplier=True, word_bits=8)
+MSP430_PROFILE = PlatformProfile(
+    key="msp430", name="MSP430G2553", costs=MSP430,
+    flash_capacity=16 * 1024, sram_capacity=512,
+    has_multiplier=False, word_bits=16, code_reserve=4 * 1024)
+HOST_PROFILE = PlatformProfile(
+    key="host", name="host cc (parity oracle)", costs=None,
+    flash_capacity=1 << 30, sram_capacity=1 << 30,
+    has_multiplier=True, word_bits=64, code_reserve=0)
+
+PLATFORMS: dict[str, PlatformProfile] = {
+    p.key: p for p in (AVR_PROFILE, MSP430_PROFILE, HOST_PROFILE)}
+
+
+def platform(key: str) -> PlatformProfile:
+    if key not in PLATFORMS:
+        raise KeyError(f"unknown platform {key!r}; have {sorted(PLATFORMS)}")
+    return PLATFORMS[key]
+
+
+def audit_budget(image_bytes: int, sram_needed: int,
+                 profile: PlatformProfile) -> dict[str, object]:
+    """Check a packed weight image + runtime working set against a platform's
+    memory budgets.  Returns the audit record; raises if either budget is
+    blown (export should fail loudly, not ship an unflashable image)."""
+    flash_avail = profile.flash_capacity - profile.code_reserve
+    rec = {
+        "platform": profile.key,
+        "flash_capacity": profile.flash_capacity,
+        "code_reserve": profile.code_reserve,
+        "image_bytes": image_bytes,
+        "flash_headroom": flash_avail - image_bytes,
+        "sram_capacity": profile.sram_capacity,
+        "sram_needed": sram_needed,
+        "sram_headroom": profile.sram_capacity - sram_needed,
+        "fits": image_bytes <= flash_avail and sram_needed <= profile.sram_capacity,
+    }
+    if not rec["fits"]:
+        raise ValueError(
+            f"image does not fit {profile.name}: "
+            f"flash {image_bytes}/{flash_avail} B, "
+            f"sram {sram_needed}/{profile.sram_capacity} B")
+    return rec
+
+
 def step_op_counts(cfg: FastGRNNConfig) -> dict[str, int]:
     """Per-sample op counts for one fastgrnn_step()."""
     d, H = cfg.input_dim, cfg.hidden_dim

@@ -94,6 +94,30 @@ class QRuntime:
         q = np.clip(np.round(t / scale), -Q15_MAX - 1, Q15_MAX)
         return (q * scale).astype(np.float32)
 
+    # -- public introspection (export compiler / parity harness) -----------
+    @property
+    def hidden_dim(self) -> int:
+        return int(self._b_z.shape[0])
+
+    @property
+    def input_dim(self) -> int:
+        return int(self._w["W2"].shape[0] if self.low_rank
+                   else self._w["W"].shape[1])
+
+    @property
+    def num_classes(self) -> int:
+        return int(self._head_b.shape[0])
+
+    def weights(self) -> dict[str, np.ndarray]:
+        """Dequantized f32 weights in deployment order (copy-free view)."""
+        return dict(self._w)
+
+    def constants(self) -> dict[str, np.ndarray | np.float32]:
+        """Float leaves as the deployed engine holds them (zeta/nu are the
+        post-sigmoid scalars, matching the C translation unit)."""
+        return {"b_z": self._b_z, "b_h": self._b_h, "head_b": self._head_b,
+                "zeta": self._zeta, "nu": self._nu}
+
     def step(self, h: np.ndarray, x: np.ndarray) -> np.ndarray:
         """One fastgrnn_step() — mirrors the C translation unit."""
         if self.low_rank:
@@ -131,23 +155,47 @@ class QRuntime:
         return np.array([self.predict(w) for w in windows], np.int32)
 
 
-def record_activations(rt: QRuntime, xs: np.ndarray) -> dict[str, np.ndarray]:
-    """Collect the intermediate tensors the calibration pass needs."""
-    H = rt._b_z.shape[0]
+def _record_maxima(rt: QRuntime, xs: np.ndarray, deploy: bool) -> dict[str, float]:
+    """One pass of the FP32 recurrence, recording per-tensor max-abs.
+
+    ``deploy=False`` records the activation-storage tensors (Table V
+    modes: pre, z, h_tilde, h, logits).  ``deploy=True`` additionally
+    records what the fixed-point export compiler must scale:
+
+      * ``x``    — raw input samples (the qvm quantizes inputs once at the
+        boundary, so the input scale is part of the weight image);
+      * ``wx1`` / ``uh1`` — the low-rank intermediate vectors W2^T x and
+        U2^T h, which the integer engine requantizes between the two
+        factored matvecs;
+      * ``pre``  — widened to cover pre+b_z and pre+b_h, because the
+        integer engine adds the (pre-scale-quantized) biases *before* the
+        LUT lookup and the bias-inclusive value must be representable.
+    """
+    H = rt.hidden_dim
     h = np.zeros(H, np.float32)
     maxima: dict[str, float] = {}
 
     def upd(name, t):
         maxima[name] = max(maxima.get(name, 0.0), float(np.max(np.abs(t))))
 
+    if deploy:
+        upd("x", xs)
     for t in range(xs.shape[0]):
         if rt.low_rank:
-            wx = _matvec(rt._w["W1"], _matvec(rt._w["W2"].T, xs[t]))
-            uh = _matvec(rt._w["U1"], _matvec(rt._w["U2"].T, h))
+            wx1 = _matvec(rt._w["W2"].T, xs[t])
+            uh1 = _matvec(rt._w["U2"].T, h)
+            if deploy:
+                upd("wx1", wx1)
+                upd("uh1", uh1)
+            wx = _matvec(rt._w["W1"], wx1)
+            uh = _matvec(rt._w["U1"], uh1)
         else:
             wx = _matvec(rt._w["W"], xs[t])
             uh = _matvec(rt._w["U"], h)
         pre = wx + uh
+        if deploy:
+            upd("pre", pre + rt._b_z)
+            upd("pre", pre + rt._b_h)
         z = _lut_eval_scalar(_SIG_LUT, pre + rt._b_z)
         h_tilde = _lut_eval_scalar(_TANH_LUT, pre + rt._b_h)
         h = (rt._zeta * (1.0 - z) + rt._nu) * h_tilde + z * h
@@ -158,12 +206,33 @@ def record_activations(rt: QRuntime, xs: np.ndarray) -> dict[str, np.ndarray]:
     return maxima
 
 
-def calibrate(rt: QRuntime, windows: np.ndarray, headroom: float = 0.10) -> dict[str, float]:
-    """Paper Sec. III-D: 5-minibatch max-abs calibration with 10% headroom."""
+def _calibrate(rt: QRuntime, windows: np.ndarray, headroom: float,
+               deploy: bool) -> dict[str, float]:
     maxima: dict[str, float] = {}
     for w in windows:
-        m = record_activations(rt, w)
-        for k, v in m.items():
+        for k, v in _record_maxima(rt, w, deploy).items():
             maxima[k] = max(maxima.get(k, 0.0), v)
     return {k: ((1.0 + headroom) * v) / Q15_MAX if v > 0 else 1.0 / Q15_MAX
             for k, v in maxima.items()}
+
+
+def record_activations(rt: QRuntime, xs: np.ndarray) -> dict[str, float]:
+    """Collect the intermediate tensors the calibration pass needs."""
+    return _record_maxima(rt, xs, deploy=False)
+
+
+def calibrate(rt: QRuntime, windows: np.ndarray, headroom: float = 0.10) -> dict[str, float]:
+    """Paper Sec. III-D: 5-minibatch max-abs calibration with 10% headroom."""
+    return _calibrate(rt, windows, headroom, deploy=False)
+
+
+def record_activations_deploy(rt: QRuntime, xs: np.ndarray) -> dict[str, float]:
+    """Max-abs recorder for the pure-integer deployment path (repro/deploy)."""
+    return _record_maxima(rt, xs, deploy=True)
+
+
+def calibrate_deploy(rt: QRuntime, windows: np.ndarray,
+                     headroom: float = 0.10) -> dict[str, float]:
+    """Deployment-path calibration: Sec. III-D run with the deploy
+    recorder, yielding every scale the export compiler packs."""
+    return _calibrate(rt, windows, headroom, deploy=True)

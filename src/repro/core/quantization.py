@@ -76,6 +76,31 @@ class QuantizedParams:
         n += sum(int(jnp.sum(v != 0)) for v in self.fp.values())
         return int(n)
 
+    # -- layout introspection (export compiler) -------------------------
+    CANONICAL_ORDER = ("W", "U", "W1", "W2", "U1", "U2", "head_w")
+
+    def tensor_order(self) -> tuple[str, ...]:
+        """Deterministic packing order of the quantized tensors: canonical
+        names first (cell factors, then head), then any extras sorted —
+        byte-identical images require a fixed order, not dict order."""
+        known = [n for n in self.CANONICAL_ORDER if n in self.q]
+        extra = sorted(n for n in self.q if n not in self.CANONICAL_ORDER)
+        return tuple(known + extra)
+
+    def layout(self) -> list[dict[str, Any]]:
+        """Per-tensor packing records: name, shape, dtype, scale, nbytes."""
+        itemsize = 2 if self.bits == 16 else 1
+        out = []
+        for name in self.tensor_order():
+            t = np.asarray(self.q[name])
+            out.append({
+                "name": name, "shape": tuple(int(s) for s in t.shape),
+                "dtype": f"int{8 * itemsize}",
+                "scale": float(self.scales[name]),
+                "nbytes": int(np.prod(t.shape)) * itemsize,
+            })
+        return out
+
 
 def quantize_params(params: dict[str, Any], cfg: QuantConfig) -> QuantizedParams:
     q, scales, fp = {}, {}, {}

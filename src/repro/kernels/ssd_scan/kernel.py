@@ -33,10 +33,16 @@ def _ssd_kernel(x_ref, dt_ref, a_ref, b_ref, c_ref, y_ref, hout_ref,
         cq = c_ref[sl, :].astype(jnp.float32)      # (Q, N)
         dA = dtq * a
         cs = jnp.cumsum(dA)                        # (Q,)
-        # intra-chunk: L[i,j] = exp(cs_i - cs_j) for i >= j
+        # intra-chunk: L[i,j] = exp(cs_i - cs_j) for i >= j.  Clamp the
+        # masked (i < j) entries BEFORE the exp — cs is decreasing so
+        # cs_i - cs_j > 0 there, and once the chunk accumulates enough
+        # |dA| (large chunks, or zero-padded tails pinning cs flat while
+        # real rows keep decaying) exp overflows to inf and inf * 0 from
+        # the post-hoc mask multiply poisons the whole row with NaN.
+        # Same fix as the jnp oracle (models/mamba2.ssd_chunked).
         li = cs[:, None] - cs[None, :]
-        mask = jnp.tril(jnp.ones((q, q), jnp.float32))
-        Ldec = jnp.exp(li) * mask
+        mask = jnp.tril(jnp.ones((q, q), bool))
+        Ldec = jnp.exp(jnp.where(mask, li, -1e30))
         scores = jnp.dot(cq, bq.T, preferred_element_type=jnp.float32)
         M = scores * Ldec * dtq[None, :]
         y_diag = jnp.dot(M, xq, preferred_element_type=jnp.float32)

@@ -10,6 +10,16 @@ batching modeled on ``serve/engine.py`` — streams attach and detach at step
 boundaries, and finished or detached slots are recycled from a pending
 queue.
 
+Session bookkeeping is a **NumPy slot table**, not per-session Python
+objects: per-slot step counters, window positions, stream lengths and
+sample cursors are columns of (S,)-shaped arrays, and buffered samples
+live in one (S, cap, d) ring buffer, so a tick costs a handful of
+vectorized ops + one fancy-index gather instead of a Python loop over
+every resident stream.  (The per-session-object version bound throughput
+at ~0.5M steps/s with the kernel math taking a minority of the tick; see
+BENCH_streaming.json for the slot-table numbers.)  Python loops remain
+only on the rare paths: admission, completion, and event emission.
+
 Determinism contract: with the default ``backend="exact"`` every stream's
 hidden trajectory, logits and predictions are **bit-identical** to running
 the scalar ``core/qruntime.QRuntime`` over the same samples (paper
@@ -29,12 +39,17 @@ Lifecycle::
 Each emitted :class:`StreamEvent` carries the per-stream warm-up counter
 state: predictions before ``warmup_samples`` total steps (paper Sec. VI-A:
 median stabilization 74 samples = 1.48 s at 50 Hz) are flagged cold.
+
+Trajectory taps (deployment parity): ``attach(..., record_trajectory=True)``
+captures the stream's per-step hidden states; :meth:`StreamingEngine.trajectory`
+returns them (bit-identical to ``QRuntime.run_window``'s trajectory under
+the exact backend) — the cross-engine witness used by ``repro.deploy.verify``.
 """
 from __future__ import annotations
 
 import collections
 import dataclasses
-from typing import Any, Iterable, Mapping
+from typing import Any, Iterable
 
 import numpy as np
 
@@ -51,6 +66,11 @@ class StreamingConfig:
     reset_on_emit: bool = True   # tumbling windows (matches QRuntime.predict)
     backend: str = "exact"       # "exact" | "jit" | "pallas"
     interpret: bool = True       # pallas backend: interpret mode (CPU)
+    ring_capacity: int = 256     # initial per-slot sample ring (grows 2x)
+    max_ring_capacity: int = 1024  # growth cap: the ring is (S, cap, d)
+    # shared, so one stream's deep backlog must not allocate O(S * backlog);
+    # samples beyond the cap spill to a per-slot chunk queue and drain into
+    # the ring as it frees
 
 
 @dataclasses.dataclass
@@ -67,17 +87,14 @@ class StreamEvent:
 
 @dataclasses.dataclass
 class _Session:
+    """Thin per-stream handle.  Counters/cursors live in the engine's slot
+    table; this only tracks identity, placement, the not-yet-placed sample
+    chunks of pending streams, and the trajectory-tap flag."""
     stream_id: str
     slot: int = -1                       # -1 -> pending (no resident slot)
-    steps: int = 0                       # warm-up counter (samples consumed)
-    window_step: int = 0
-    total_steps: int | None = None       # finite stream length; None = open
-    buffer: collections.deque = dataclasses.field(
-        default_factory=collections.deque)
-
-    @property
-    def finished(self) -> bool:
-        return self.total_steps is not None and self.steps >= self.total_steps
+    chunks: collections.deque = dataclasses.field(
+        default_factory=collections.deque)   # buffered while pending
+    record_trajectory: bool = False
 
 
 class StreamingEngine:
@@ -96,15 +113,28 @@ class StreamingEngine:
                                     naive_acts=naive_acts,
                                     backend=config.backend,
                                     interpret=config.interpret)
-        S = config.max_slots
+        S, d = config.max_slots, self.kernel.input_dim
         self._h = self.kernel.init_state(S)
-        self._x = np.zeros((S, self.kernel.input_dim), np.float32)
-        self._active = np.zeros((S,), bool)
+        self._x = np.zeros((S, d), np.float32)
+        # --- slot table (vectorized bookkeeping) -----------------------
+        self._steps = np.zeros(S, np.int64)      # samples consumed
+        self._wstep = np.zeros(S, np.int64)      # position in current window
+        self._total = np.full(S, -1, np.int64)   # finite length; -1 = open
+        self._resident = np.zeros(S, bool)
+        self._head = np.zeros(S, np.int64)       # ring read cursor (absolute)
+        self._tail = np.zeros(S, np.int64)       # ring write cursor (absolute)
+        self._cap = max(8, min(config.ring_capacity, config.max_ring_capacity))
+        self._ring = np.zeros((S, self._cap, d), np.float32)
+        self._spill: dict[int, collections.deque] = {}  # slot -> chunk queue
+        self._tap = np.zeros(S, bool)            # trajectory-tap flag
+        # --- identity / lifecycle -------------------------------------
         self._sessions: dict[str, _Session] = {}
         self._slot_owner: list[str | None] = [None] * S
         self._free: list[int] = list(range(S - 1, -1, -1))
-        self._dirty = np.zeros((S,), bool)   # freed slots with stale state
+        self._dirty = np.zeros(S, bool)          # freed slots, stale state
         self._pending: collections.deque[str] = collections.deque()
+        self._pending_total: dict[str, int | None] = {}
+        self._trajectories: dict[str, list[np.ndarray]] = {}
         # telemetry
         self._ticks = 0
         self._stream_steps = 0
@@ -115,7 +145,8 @@ class StreamingEngine:
     # Session lifecycle
     # ------------------------------------------------------------------
     def attach(self, stream_id: str, samples: np.ndarray | None = None, *,
-               total_steps: int | None = None) -> str:
+               total_steps: int | None = None,
+               record_trajectory: bool = False) -> str:
         """Register a stream.  Returns ``"active"`` if a slot was free,
         ``"pending"`` if the stream was queued for the next free slot.
 
@@ -123,11 +154,16 @@ class StreamingEngine:
         ``total_steps``: finite stream length — the session auto-finishes
         (emitting a final event and recycling its slot) after that many
         samples.  ``None`` keeps the stream open until :meth:`detach`.
+        ``record_trajectory``: tap the per-step hidden states (exact
+        backend: bit-identical to the scalar reference trajectory).
         """
         if stream_id in self._sessions:
             raise ValueError(f"stream {stream_id!r} already attached")
-        s = _Session(stream_id=stream_id, total_steps=total_steps)
+        s = _Session(stream_id=stream_id, record_trajectory=record_trajectory)
         self._sessions[stream_id] = s
+        self._pending_total[stream_id] = total_steps
+        if record_trajectory:
+            self._trajectories[stream_id] = []
         if samples is not None:
             self.feed(stream_id, samples)
         # FIFO fairness: a free slot goes to the new stream only when no
@@ -148,7 +184,10 @@ class StreamingEngine:
             raise ValueError(
                 f"stream {stream_id!r}: samples must be (k, "
                 f"{self.kernel.input_dim}), got {samples.shape}")
-        s.buffer.extend(samples)
+        if s.slot < 0:
+            s.chunks.append(samples)
+        else:
+            self._ring_write(s.slot, samples)
 
     def detach(self, stream_id: str) -> StreamEvent | None:
         """Terminate a stream at a step boundary.  If it consumed samples
@@ -157,13 +196,15 @@ class StreamingEngine:
         s = self._sessions.pop(stream_id)
         ev = None
         if s.slot >= 0:
-            if s.window_step > 0:
-                logits = self.kernel.head_logits(
-                    self._h[s.slot:s.slot + 1])[0]
-                ev = self._event(s, "final", logits)
-            self._release(s.slot)
+            slot = s.slot
+            if self._wstep[slot] > 0:
+                logits = self.kernel.head_logits(self._h[slot:slot + 1])[0]
+                ev = self._event(stream_id, slot, "final",
+                                 int(self._wstep[slot]), logits)
+            self._release(slot)
         else:
             self._pending.remove(stream_id)
+            self._pending_total.pop(stream_id, None)
         self._completed += 1
         return ev
 
@@ -176,71 +217,144 @@ class StreamingEngine:
         one step, and emit window/final events.  Streams without buffered
         samples idle (hidden state held bit-for-bit)."""
         self._admit()
-        x, active = self._x, self._active
-        x[:] = 0.0
-        active[:] = False
-        stepped: list[_Session] = []
-        for sid in list(self._slot_owner):
-            if sid is None:
-                continue
-            s = self._sessions[sid]
-            if s.buffer:
-                x[s.slot] = s.buffer.popleft()
-                active[s.slot] = True
-                stepped.append(s)
-        if not stepped:
+        avail = self._resident & (self._tail > self._head)
+        rows = np.nonzero(avail)[0]
+        if rows.size == 0:
             return []
-        self._h = self.kernel.step(self._h, x, active)
+        # gather one sample per advancing slot from the ring (vectorized)
+        x = self._x
+        x[:] = 0.0
+        x[rows] = self._ring[rows, self._head[rows] % self._cap]
+        self._h = self.kernel.step(self._h, x, avail)
+        self._head[rows] += 1
+        self._steps[rows] += 1
+        self._wstep[rows] += 1
         self._ticks += 1
-        self._stream_steps += len(stepped)
+        self._stream_steps += int(rows.size)
+        if self._spill:
+            self._drain_spill()
 
-        # logits are computed only for emitting slots — most ticks emit
-        # nothing, so running the head over all slots every tick would
-        # throw away ~(window-1)/window of the work
-        emits: list[tuple[_Session, str]] = []
-        for s in stepped:
-            s.steps += 1
-            s.window_step += 1
-            if s.window_step == self.config.window:
-                emits.append((s, "window"))
-            elif s.finished:               # partial window at stream end
-                emits.append((s, "final"))
+        if np.any(self._tap[rows]):
+            for i in np.nonzero(self._tap & avail)[0]:
+                sid = self._slot_owner[i]
+                self._trajectories[sid].append(self._h[i].copy())
+
+        # emission: window boundaries + finished streams (rare -> loops)
+        window = self.config.window
+        at_window = avail & (self._wstep == window)
+        finished = avail & (self._total >= 0) & (self._steps >= self._total)
+        emit_rows = np.nonzero(at_window | finished)[0]
         events: list[StreamEvent] = []
-        if emits:
-            rows = np.array([s.slot for s, _ in emits])
-            logits = self.kernel.head_logits(self._h[rows])
-            events = [self._event(s, kind, logits[i])
-                      for i, (s, kind) in enumerate(emits)]
+        if emit_rows.size:
+            logits = self.kernel.head_logits(self._h[emit_rows])
+            for i, slot in enumerate(emit_rows):
+                kind = "window" if at_window[slot] else "final"
+                events.append(self._event(
+                    self._slot_owner[slot], int(slot), kind,
+                    int(self._wstep[slot]), logits[i]))
 
-        reset = np.zeros((self.config.max_slots,), bool)
-        for s in stepped:
-            if s.window_step == self.config.window:
-                s.window_step = 0
-                if self.config.reset_on_emit:
-                    reset[s.slot] = True
-            if s.finished:
-                del self._sessions[s.stream_id]
-                self._release(s.slot)
-                self._completed += 1
-        if reset.any():
-            self._h = self.kernel.reset(self._h, reset)
+        if np.any(at_window):
+            self._wstep[at_window] = 0
+            if self.config.reset_on_emit:
+                self._h = self.kernel.reset(self._h, at_window)
+        for slot in np.nonzero(finished)[0]:
+            sid = self._slot_owner[slot]
+            del self._sessions[sid]
+            self._release(int(slot))
+            self._completed += 1
         return events
 
     def drain(self) -> list[StreamEvent]:
         """Tick until no resident or pending stream can advance (buffers
         empty).  Open streams stay attached; feed more and step again."""
         events: list[StreamEvent] = []
-        while any(s.buffer for s in self._sessions.values()):
+        while self._any_buffered():
             out = self.step()
-            if not out and not any(
-                    s.buffer for s in self._sessions.values() if s.slot >= 0):
+            if not out and not bool(np.any(
+                    self._resident & (self._tail > self._head))):
                 break  # only pending streams hold samples and no slot frees
             events.extend(out)
         return events
 
     # ------------------------------------------------------------------
+    # Trajectory taps (deployment parity harness)
+    # ------------------------------------------------------------------
+    def trajectory(self, stream_id: str) -> np.ndarray:
+        """(steps, H) hidden trajectory of a tapped stream (attach with
+        ``record_trajectory=True``).  Survives stream completion/detach."""
+        if stream_id not in self._trajectories:
+            raise KeyError(f"stream {stream_id!r} was not tapped")
+        rows = self._trajectories[stream_id]
+        H = self.kernel.hidden_dim
+        return (np.stack(rows) if rows else np.zeros((0, H), np.float32))
+
+    # ------------------------------------------------------------------
     # Internals
     # ------------------------------------------------------------------
+    def _any_buffered(self) -> bool:
+        if bool(np.any(self._resident & (self._tail > self._head))):
+            return True
+        if self._spill:
+            return True
+        return any(s.chunks for s in self._sessions.values() if s.slot < 0)
+
+    def _ring_write(self, slot: int, samples: np.ndarray) -> None:
+        k = len(samples)
+        if k == 0:
+            return
+        if slot in self._spill:          # keep FIFO order behind the spill
+            self._spill[slot].append(samples)
+            return
+        needed = int(self._tail[slot] - self._head[slot]) + k
+        if needed > self._cap and self._cap < self.config.max_ring_capacity:
+            self._grow_ring(min(needed, self.config.max_ring_capacity))
+        space = self._cap - int(self._tail[slot] - self._head[slot])
+        take = min(space, k)
+        if take:
+            idx = (self._tail[slot] + np.arange(take)) % self._cap
+            self._ring[slot, idx] = samples[:take]
+            self._tail[slot] += take
+        if take < k:                     # backlog beyond the shared ring
+            self._spill[slot] = collections.deque([samples[take:]])
+
+    def _drain_spill(self) -> None:
+        """Refill rings from spilled backlogs as space frees (rare path —
+        only slots that were ever fed past max_ring_capacity)."""
+        for slot in list(self._spill):
+            q = self._spill[slot]
+            while q:
+                space = self._cap - int(self._tail[slot] - self._head[slot])
+                if space <= 0:
+                    break
+                chunk = q.popleft()
+                take = min(space, len(chunk))
+                idx = (self._tail[slot] + np.arange(take)) % self._cap
+                self._ring[slot, idx] = chunk[:take]
+                self._tail[slot] += take
+                if take < len(chunk):
+                    q.appendleft(chunk[take:])
+                    break
+            if not q:
+                del self._spill[slot]
+
+    def _grow_ring(self, needed: int) -> None:
+        new_cap = self._cap
+        while new_cap < needed:
+            new_cap *= 2
+        new_cap = min(new_cap, max(self.config.max_ring_capacity, self._cap))
+        if new_cap == self._cap:
+            return
+        ring = np.zeros((self._ring.shape[0], new_cap, self._ring.shape[2]),
+                        np.float32)
+        navail = self._tail - self._head
+        for slot in np.nonzero(navail > 0)[0]:
+            n = int(navail[slot])
+            idx = (self._head[slot] + np.arange(n)) % self._cap
+            ring[slot, :n] = self._ring[slot, idx]
+        self._head[:] = 0                 # re-base cursors onto the copy
+        self._tail[:] = navail
+        self._ring, self._cap = ring, new_cap
+
     def _place(self, s: _Session, slot: int) -> None:
         s.slot = slot
         self._slot_owner[slot] = s.stream_id
@@ -248,12 +362,27 @@ class StreamingEngine:
             self._h = self.kernel.reset(
                 self._h, np.arange(self.config.max_slots) == slot)
             self._dirty[slot] = False
+        self._steps[slot] = 0
+        self._wstep[slot] = 0
+        total = self._pending_total.pop(s.stream_id, None)
+        self._total[slot] = -1 if total is None else int(total)
+        self._resident[slot] = True
+        self._head[slot] = 0
+        self._tail[slot] = 0
+        self._tap[slot] = s.record_trajectory
+        while s.chunks:
+            self._ring_write(slot, s.chunks.popleft())
         n_active = self.config.max_slots - len(self._free)
         self._peak_active = max(self._peak_active, n_active)
 
     def _release(self, slot: int) -> None:
         self._slot_owner[slot] = None
         self._dirty[slot] = True
+        self._resident[slot] = False
+        self._tap[slot] = False
+        self._head[slot] = 0
+        self._tail[slot] = 0
+        self._spill.pop(slot, None)
         self._free.append(slot)
 
     def _admit(self) -> None:
@@ -261,13 +390,15 @@ class StreamingEngine:
             sid = self._pending.popleft()
             self._place(self._sessions[sid], self._free.pop())
 
-    def _event(self, s: _Session, kind: str, logits: np.ndarray) -> StreamEvent:
+    def _event(self, stream_id: str, slot: int, kind: str, window_step: int,
+               logits: np.ndarray) -> StreamEvent:
+        steps = int(self._steps[slot])
         return StreamEvent(
-            stream_id=s.stream_id, kind=kind, step=s.steps,
-            window_step=s.window_step or self.config.window,
+            stream_id=stream_id, kind=kind, step=steps,
+            window_step=window_step or self.config.window,
             prediction=int(np.argmax(logits)),
             logits=np.asarray(logits, np.float32).copy(),
-            warm=s.steps >= self.config.warmup_samples)
+            warm=steps >= self.config.warmup_samples)
 
     # ------------------------------------------------------------------
     # Introspection
@@ -290,6 +421,7 @@ class StreamingEngine:
             "ticks": self._ticks,
             "stream_steps": self._stream_steps,
             "completed": self._completed,
+            "ring_capacity": self._cap,
         }
 
 
