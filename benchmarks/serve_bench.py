@@ -1,0 +1,145 @@
+"""Continuous batching vs the window-boundary baseline: LM tokens/s at
+mixed sequence lengths.
+
+    PYTHONPATH=src python -m benchmarks.serve_bench \
+        [--arch deepseek-7b] [--slots 8] [--requests 32] [--smoke] \
+        [--out BENCH_serve.json]
+
+Both modes run the SAME rewritten engine (serve/engine.py on
+serve/scheduler.py); only the scheduler's admission policy differs:
+
+  * ``window``     — ``admit_policy="all_free"``: a new wave of requests is
+    admitted only when every slot is free, i.e. each wave runs as long as
+    its longest sequence.  This is exactly the old engine's "slot reuse at
+    window boundaries" behaviour, kept as a measurable baseline.
+  * ``continuous`` — ``admit_policy="any_free"``: a finished sequence's
+    KV-cache slot is re-prefilled from the pending queue on the next tick.
+
+With mixed generation lengths the baseline idles short sequences' slots
+until the wave's straggler finishes; continuous batching keeps them
+packed.  The emitted record carries both modes' tokens/s plus the
+scheduler counters (admissions / recycles / spills / occupancy).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import platform
+import time
+
+import jax
+import numpy as np
+
+import repro.configs as C
+from repro.models import transformer as T
+from repro.serve.engine import Engine, ServeConfig
+
+
+def mixed_budgets(rng, n, lo, hi, long_lo, long_hi, long_frac=0.25):
+    """Mostly-short generation budgets with a heavy tail of stragglers —
+    the regime where window-boundary batching wastes the most slot time."""
+    budgets = rng.integers(lo, hi + 1, n)
+    n_long = max(1, int(round(long_frac * n)))
+    long_rows = rng.choice(n, size=n_long, replace=False)
+    budgets[long_rows] = rng.integers(long_lo, long_hi + 1, n_long)
+    return budgets
+
+
+def run_mode(policy, cfg, params, prompts, budgets, max_len, slots,
+             repeats=3):
+    eng = Engine(cfg, params, ServeConfig(max_len=max_len, max_slots=slots,
+                                          admit_policy=policy))
+    # warm the jit caches (prefill at this prompt geometry + decode tick)
+    # so neither mode is billed for compilation; per-round counter deltas
+    # keep the warm-up out of the record
+    eng.submit(prompts[0], 2)
+    eng.run()
+    tokens = int(np.sum(budgets))
+    best = None
+    for _ in range(repeats):           # best-of-N: shrug off load spikes
+        st0, sched0 = eng.stats(), eng.stats()["scheduler"]
+        t0 = time.perf_counter()
+        rids = [eng.submit(p, int(b)) for p, b in zip(prompts, budgets)]
+        eng.run()
+        wall = time.perf_counter() - t0
+        for rid, b in zip(rids, budgets):
+            got = eng.result(rid)
+            assert got.shape == (b,), (rid, got.shape, b)
+        st = eng.stats()
+        sched = dict(st["scheduler"])
+        for key in ("admissions", "recycles", "spills", "completed",
+                    "cancelled", "ticks"):
+            sched[key] -= sched0[key]
+        row = {
+            "mode": "continuous" if policy == "any_free" else "window",
+            "admit_policy": policy,
+            "requests": len(rids),
+            "tokens": tokens,
+            "wall_s": round(wall, 4),
+            "tokens_per_sec": round(tokens / wall, 2),
+            "decode_ticks": st["decode_ticks"] - st0["decode_ticks"],
+            "prefills": st["prefills"] - st0["prefills"],
+            "scheduler": sched,
+        }
+        if best is None or row["wall_s"] < best["wall_s"]:
+            best = row
+    return best
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="deepseek-7b", choices=list(C.ARCHS))
+    ap.add_argument("--slots", type=int, default=8)
+    ap.add_argument("--requests", type=int, default=32)
+    ap.add_argument("--prompt-len", type=int, default=8)
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny config for CI schema validation")
+    ap.add_argument("--out", default="BENCH_serve.json")
+    args = ap.parse_args()
+
+    full = C.get(args.arch)
+    if not full.has_decode:
+        raise SystemExit(f"{args.arch} is encoder-only: no decode path")
+    cfg = C.reduced(full, compute_dtype="float32", param_dtype="float32")
+    params = T.init(cfg, jax.random.PRNGKey(0))
+    rng = np.random.default_rng(0)
+
+    if args.smoke:
+        slots, n, max_len = 2, 6, 48
+        budgets = mixed_budgets(rng, n, 3, 6, 12, 16)
+    else:
+        slots, n, max_len = args.slots, args.requests, 160
+        budgets = mixed_budgets(rng, n, 8, 24, 96, 128)
+    prompts = rng.integers(0, cfg.vocab_size, (n, args.prompt_len))
+
+    results = []
+    for policy in ("all_free", "any_free"):
+        r = run_mode(policy, cfg, params, prompts, budgets, max_len, slots)
+        results.append(r)
+        print(f"{r['mode']:10s}: {r['tokens']} tokens in {r['wall_s']:.2f}s "
+              f"= {r['tokens_per_sec']:>8.1f} tok/s  "
+              f"({r['decode_ticks']} decode ticks, "
+              f"{r['scheduler']['recycles']} recycles)", flush=True)
+
+    speedup = results[1]["tokens_per_sec"] / results[0]["tokens_per_sec"]
+    record = {
+        "benchmark": "serve_continuous_batching",
+        "model": f"{args.arch} (reduced, f32)",
+        "slots": slots,
+        "requests": n,
+        "prompt_len": args.prompt_len,
+        "budgets": {"min": int(budgets.min()), "max": int(budgets.max()),
+                    "mean": round(float(budgets.mean()), 1)},
+        "host": {"platform": platform.platform(),
+                 "jax": jax.__version__,
+                 "device": str(jax.devices()[0])},
+        "results": results,
+        "speedup_tokens_per_sec": round(speedup, 3),
+    }
+    with open(args.out, "w") as f:
+        json.dump(record, f, indent=2)
+    print(f"continuous/window speedup: {speedup:.2f}x -> wrote {args.out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -39,9 +39,9 @@ CONCURRENCY = (256, 1024, 2048, 4096) if FULL else (256, 1024, 2048)
 
 
 def bench_backend(backend: str, windows: np.ndarray, n_windows: int,
-                  qp) -> list[dict]:
+                  qp, concurrency=CONCURRENCY) -> list[dict]:
     rows = []
-    for n_streams in CONCURRENCY:
+    for n_streams in concurrency:
         cfg = StreamingConfig(max_slots=n_streams, backend=backend)
         eng = StreamingEngine(qp, cfg)
         src = windows[np.arange(n_streams) % len(windows)]
@@ -88,7 +88,11 @@ def main() -> None:
     parser.add_argument("--backends", default="exact,jit")
     parser.add_argument("--windows", type=int, default=2,
                         help="128-sample windows per stream")
+    parser.add_argument("--concurrency", default=None,
+                        help="comma-separated stream counts (CI smoke: 64)")
     args = parser.parse_args()
+    concurrency = (tuple(int(c) for c in args.concurrency.split(","))
+                   if args.concurrency else CONCURRENCY)
 
     cfg = fg.FastGRNNConfig(rank_w=2, rank_u=8)
     qp = quantize_params(fg.init_params(cfg, jax.random.PRNGKey(0)),
@@ -97,7 +101,8 @@ def main() -> None:
 
     rows = []
     for backend in args.backends.split(","):
-        rows += bench_backend(backend.strip(), windows, args.windows, qp)
+        rows += bench_backend(backend.strip(), windows, args.windows, qp,
+                              concurrency)
 
     record = {
         "benchmark": "streaming_throughput",

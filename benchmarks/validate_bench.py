@@ -1,0 +1,102 @@
+"""Schema validation for the emitted BENCH_*.json perf artifacts.
+
+    PYTHONPATH=src python -m benchmarks.validate_bench BENCH_*.json
+
+CI's bench-smoke job regenerates the benchmarks in a tiny configuration
+and runs this validator over the output, so a refactor that silently
+breaks a bench (missing key, NaN/inf throughput, empty results) fails the
+build instead of rotting the perf trajectory.
+
+Each known ``benchmark`` kind pins its required top-level keys and, where
+the record carries a ``results`` list, the required per-row keys.  Every
+numeric value anywhere in the record must be finite.
+"""
+from __future__ import annotations
+
+import json
+import math
+import sys
+
+SCHEMAS: dict[str, dict] = {
+    "streaming_throughput": {
+        "top": ["benchmark", "model", "sample_rate_hz", "window", "host",
+                "results"],
+        "row": ["backend", "concurrent_streams", "ticks",
+                "stream_steps_per_sec", "streams_per_sec", "p50_ms",
+                "p99_ms", "realtime_streams_50hz"],
+    },
+    "serve_continuous_batching": {
+        "top": ["benchmark", "model", "slots", "requests", "budgets",
+                "host", "results", "speedup_tokens_per_sec"],
+        "row": ["mode", "admit_policy", "requests", "tokens", "wall_s",
+                "tokens_per_sec", "decode_ticks", "prefills", "scheduler"],
+    },
+    "deploy_export": {
+        "top": ["benchmark", "model", "host", "image", "budgets", "qvm",
+                "c_host", "parity", "mcu_cycle_model"],
+    },
+}
+
+
+def _walk_numbers(obj, path, errors):
+    if isinstance(obj, bool):
+        return
+    if isinstance(obj, (int, float)):
+        if not math.isfinite(obj):
+            errors.append(f"{path}: non-finite number {obj!r}")
+    elif isinstance(obj, dict):
+        for k, v in obj.items():
+            _walk_numbers(v, f"{path}.{k}", errors)
+    elif isinstance(obj, list):
+        for i, v in enumerate(obj):
+            _walk_numbers(v, f"{path}[{i}]", errors)
+
+
+def validate(path: str) -> tuple[str | None, list[str]]:
+    """-> (benchmark kind, list of schema errors; empty = valid)."""
+    errors: list[str] = []
+    try:
+        with open(path) as f:
+            record = json.load(f)
+    except (OSError, json.JSONDecodeError) as e:
+        return None, [f"{path}: unreadable ({e})"]
+    kind = record.get("benchmark")
+    schema = SCHEMAS.get(kind)
+    if schema is None:
+        return kind, [f"{path}: unknown benchmark kind {kind!r} "
+                      f"(known: {sorted(SCHEMAS)})"]
+    for key in schema["top"]:
+        if key not in record:
+            errors.append(f"{path}: missing top-level key {key!r}")
+    rows = record.get("results")
+    if "row" in schema:
+        if not isinstance(rows, list) or not rows:
+            errors.append(f"{path}: 'results' must be a non-empty list")
+        else:
+            for i, row in enumerate(rows):
+                for key in schema["row"]:
+                    if key not in row:
+                        errors.append(
+                            f"{path}: results[{i}] missing key {key!r}")
+    _walk_numbers(record, path, errors)
+    return kind, errors
+
+
+def main(argv: list[str]) -> int:
+    if not argv:
+        print("usage: python -m benchmarks.validate_bench BENCH_*.json")
+        return 2
+    failures = 0
+    for path in argv:
+        kind, errors = validate(path)
+        if errors:
+            failures += 1
+            for e in errors:
+                print(f"FAIL  {e}")
+        else:
+            print(f"ok    {path} ({kind})")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))

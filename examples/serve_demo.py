@@ -36,6 +36,10 @@ out_fp = fp.generate(prompts, max_new=args.new_tokens)
 out_q8 = q8.generate(prompts, max_new=args.new_tokens)
 agree = float((out_fp == out_q8).mean())
 print(f"generated {out_fp.shape[1]} tokens x {args.batch} sequences")
+sched = fp.stats()["scheduler"]
+print(f"scheduler: {sched['admissions']} admissions, "
+      f"{sched['recycles']} recycles, {sched['spills']} spills "
+      f"(continuous batching via serve/scheduler.py)")
 print(f"bf16-vs-int8 token agreement: {agree*100:.1f}% "
       f"(greedy, random-init model — trained models track much closer)")
 

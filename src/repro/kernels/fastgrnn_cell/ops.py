@@ -151,6 +151,32 @@ class Q15StreamStep:
         h_new = qstep.step_batched(np, self._np_arrs, self.sw, h, x)
         return np.where(active[:, None], h_new, h).astype(np.float32)
 
+    # -- scheduler/program adapter ------------------------------------------
+    def step_rows(self, h, x, active, rows=None):
+        """Slot-program adapter for ``serve/scheduler.SlotScheduler``
+        consumers: advance exactly the slots listed in ``rows`` (the
+        precomputed ``np.nonzero(active)[0]``; derived here if omitted).
+
+        The exact backend computes *only* those rows — ``step_batched`` is
+        row-independent (one fixed-order f32 matvec chain per row), so the
+        gathered computation is bit-identical to the masked full-batch step
+        while skipping idle slots entirely (partial-occupancy ticks no
+        longer pay for the whole slot table).  The jit/pallas backends keep
+        the fixed-shape masked step: a varying row count would retrace /
+        repad every tick, costing more than the skipped rows save."""
+        if rows is None:
+            rows = np.nonzero(active)[0]
+        if self.backend != "exact":
+            return self._step(np.asarray(h, np.float32),
+                              np.asarray(x, np.float32),
+                              np.asarray(active, bool))
+        if rows.size == 0:
+            return np.asarray(h, np.float32)
+        h = np.asarray(h, np.float32).copy()
+        h[rows] = qstep.step_batched(np, self._np_arrs, self.sw,
+                                     h[rows], np.asarray(x, np.float32)[rows])
+        return h
+
     def _build_jit(self):
         arrs, sw = self._jnp_arrs, self.sw
 

@@ -298,6 +298,43 @@ def attn_decode_splitkv(p, x, cache_k, cache_v, cache_len, cfg, *, mesh,
     return o, new_k, new_v
 
 
+def attn_decode_slotted(p, x, cache_k, cache_v, pos, cfg, *, active=None,
+                        window=None, compute_dtype=jnp.bfloat16):
+    """Per-slot single-token decode (continuous batching).  x: (B, 1, D);
+    cache_k/v: (B, S_max, KV, hd); ``pos``: (B,) int32 — each row's own
+    cache fill level, so sequences admitted at different times decode in
+    one batch.  The new token's K/V lands at ``pos[b]`` via a one-hot
+    select (a per-row ``dynamic_update_slice`` is not expressible; the
+    select writes the same bytes) and row ``b`` attends over its own
+    prefix ``0..pos[b]``.  ``active``: optional (B,) bool — inactive rows
+    write nothing (cache bit-for-bit preserved; their outputs are
+    discarded by the caller).  Returns (out, new_k, new_v)."""
+    H, KV, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    s_max = cache_k.shape[1]
+    q = _split_heads(L.dense_apply(p["q"], x, compute_dtype=compute_dtype), H, hd)
+    k = _split_heads(L.dense_apply(p["k"], x, compute_dtype=compute_dtype), KV, hd)
+    v = _split_heads(L.dense_apply(p["v"], x, compute_dtype=compute_dtype), KV, hd)
+    pos = pos.astype(jnp.int32)
+    q = L.apply_rope(q, pos[:, None], cfg.rope_theta)
+    k = L.apply_rope(k, pos[:, None], cfg.rope_theta)
+    write = jnp.arange(s_max)[None, :] == pos[:, None]          # (B, S_max)
+    if active is not None:
+        write &= active[:, None]
+    m = write[:, :, None, None]
+    new_k = jnp.where(m, k.astype(cache_k.dtype), cache_k)
+    new_v = jnp.where(m, v.astype(cache_v.dtype), cache_v)
+    valid = jnp.arange(s_max)[None, :] <= pos[:, None]
+    if window is not None:
+        valid &= jnp.arange(s_max)[None, :] > (pos[:, None] - window)
+    kr = _repeat_kv(new_k.astype(compute_dtype), H // KV)
+    vr = _repeat_kv(new_v.astype(compute_dtype), H // KV)
+    o = attention_scores(q, kr, vr, causal=False, q_offset=0,
+                         kv_len_mask=valid)
+    o = L.dense_apply(p["o"], o.reshape(x.shape[:-1] + (H * hd,)),
+                      compute_dtype=compute_dtype)
+    return o, new_k, new_v
+
+
 def attn_decode(p, x, cache_k, cache_v, cache_len, cfg, *,
                 window=None, compute_dtype=jnp.bfloat16):
     """Single-token decode.  x: (B, 1, D); cache_k/v: (B, S_max, KV, hd);

@@ -581,3 +581,186 @@ def decode_step(cfg, params, cache, tokens, *, window=None, mesh=None,
     else:
         logits = L.unembed_apply(params["embed"], x, cfg.cdtype)
     return logits, cache
+
+
+# ---------------------------------------------------------------------------
+# Slotted caches: per-slot fill levels for continuous batching
+# (serve/engine.py rides serve/scheduler.SlotScheduler over these)
+# ---------------------------------------------------------------------------
+
+def init_slot_cache(cfg, n_slots: int, max_len: int, dtype=jnp.bfloat16):
+    """Slot-table decode cache: identical per-family layout to
+    :func:`init_cache`, but with a per-slot fill level ``cache["pos"]``
+    ((S,) int32) instead of the single shared ``cache["len"]`` — the
+    state layout that lets a finished sequence's slot be re-prefilled
+    while its neighbours keep decoding."""
+    c = init_cache(cfg, n_slots, max_len, dtype)
+    del c["len"]
+    c["pos"] = jnp.zeros((n_slots,), jnp.int32)
+    return c
+
+
+def reset_cache_slot(cfg, cache, slot: int):
+    """Zero one slot's rows of a slotted cache (recycling hygiene: the SSM
+    carry is additive and MUST be cleared; KV is cleared too so stale keys
+    can never leak past an off-by-one in the position mask)."""
+    c = dict(cache)
+    c["pos"] = cache["pos"].at[slot].set(0)
+    for name in ("k", "v", "ssm"):
+        if cache.get(name) is not None:
+            c[name] = cache[name].at[:, slot].set(0)
+    if cache.get("conv") is not None:
+        c["conv"] = jax.tree.map(lambda a: a.at[:, slot].set(0), cache["conv"])
+    return c
+
+
+def prefill_into_slot(cfg, params, cache, batch, slot, *, window=None,
+                      return_hidden=False):
+    """Prefill ONE sequence (leading batch dim 1) and write its caches into
+    row ``slot`` of a slotted cache — the admission half of continuous
+    batching: a freed slot is re-prefilled without touching the other
+    residents.  ``slot`` may be a traced scalar, so the whole function jits
+    once per prompt length.  Returns ``(logits (1, s, V) f32, new cache)``
+    — or the final normed hidden states ``(1, s, D)`` with
+    ``return_hidden=True`` (quantized-head serving applies its own head)."""
+    x, _, caches, off = backbone(cfg, params, batch, window=window)
+    if return_hidden:
+        out = x
+    else:
+        if not cfg.tie_embeddings and "lm_head" in params:
+            out = L.dense_apply(params["lm_head"], x,
+                                compute_dtype=cfg.cdtype).astype(jnp.float32)
+        else:
+            out = L.unembed_apply(params["embed"], x, cfg.cdtype)
+        if cfg.family == "vlm" and off:
+            out = out[:, off:]
+    s = x.shape[1]                       # includes vlm patch positions
+    slot = jnp.asarray(slot, jnp.int32)
+    c = dict(cache)
+    if caches.get("k") is not None:
+        c["k"] = jax.lax.dynamic_update_slice(
+            cache["k"], caches["k"].astype(cache["k"].dtype),
+            (0, slot, 0, 0, 0))
+        c["v"] = jax.lax.dynamic_update_slice(
+            cache["v"], caches["v"].astype(cache["v"].dtype),
+            (0, slot, 0, 0, 0))
+    if caches.get("ssm") is not None:
+        c["ssm"] = jax.lax.dynamic_update_slice(
+            cache["ssm"], caches["ssm"].astype(cache["ssm"].dtype),
+            (0, slot, 0, 0, 0))
+        c["conv"] = jax.tree.map(
+            lambda dst, src: jax.lax.dynamic_update_slice(
+                dst, src.astype(dst.dtype), (0, slot, 0, 0)),
+            cache["conv"], caches["conv"])
+    c["pos"] = jax.lax.dynamic_update_slice(
+        cache["pos"], jnp.asarray([s], jnp.int32), (slot,))
+    return out, c
+
+
+def decode_step_slotted(cfg, params, cache, tokens, active=None, *,
+                        window=None, return_hidden=False):
+    """One decode tick over a slotted cache.  tokens: (S, 1) int32 ->
+    ``(logits (S, 1, V) f32, new cache)`` — or final normed hidden states
+    ``(S, 1, D)`` with ``return_hidden=True``.
+
+    Unlike :func:`decode_step`, every slot advances at its own
+    ``cache["pos"][b]``: row ``b`` writes its K/V (or SSM update) at its
+    own position and attends over its own prefix.  ``active``: (S,) bool —
+    inactive slots (free, or awaiting admission) keep cache AND ``pos``
+    bit-for-bit; their outputs are computed-and-discarded so the tick stays
+    one fixed-shape jit call regardless of occupancy."""
+    x = L.embed_apply(params["embed"], tokens, cfg.cdtype)
+    pos = cache["pos"]
+    if active is None:
+        active = jnp.ones((tokens.shape[0],), bool)
+    active = active.astype(bool)
+
+    if cfg.family in ("dense", "moe", "vlm"):
+        def body(x, xs):
+            bp, ck, cv = xs
+            h = L.rmsnorm_apply(bp["ln1"], x, cfg.norm_eps)
+            h, nk, nv = A.attn_decode_slotted(
+                bp["attn"], h, ck, cv, pos, cfg, active=active,
+                window=window, compute_dtype=cfg.cdtype)
+            x = x + h
+            y = L.rmsnorm_apply(bp["ln2"], x, cfg.norm_eps)
+            if cfg.family == "moe":
+                m, _ = M.moe_apply(bp["moe"], y, top_k=cfg.top_k,
+                                   capacity_factor=cfg.num_experts / cfg.top_k,
+                                   kind=cfg.mlp_kind, compute_dtype=cfg.cdtype)
+            else:
+                m = L.mlp_apply(bp["mlp"], y, cfg.mlp_kind,
+                                compute_dtype=cfg.cdtype)
+            return x + m, (nk, nv)
+        x, (nk, nv) = jax.lax.scan(body, x,
+                                   (params["blocks"], cache["k"], cache["v"]))
+        cache = dict(cache, k=nk, v=nv)
+
+    elif cfg.family == "ssm":
+        def body(x, xs):
+            bp, conv, ssm = xs
+            h = L.rmsnorm_apply(bp["ln"], x, cfg.norm_eps)
+            y, nconv, nssm = S.mamba_decode(bp["mamba"], h, conv, ssm, cfg,
+                                            compute_dtype=cfg.cdtype)
+            nconv = jax.tree.map(
+                lambda new, old: jnp.where(active[:, None, None], new, old),
+                nconv, conv)
+            nssm = jnp.where(active[:, None, None, None], nssm, ssm)
+            return x + y, (nconv, nssm)
+        x, (nconv, nssm) = jax.lax.scan(
+            body, x, (params["blocks"], cache["conv"], cache["ssm"]))
+        cache = dict(cache, conv=nconv, ssm=nssm)
+
+    elif cfg.family == "hybrid":
+        n_full, tail = _hybrid_groups(cfg)
+        per = cfg.attn_every
+        def body(x, xs):
+            bp, conv, ssm = xs
+            h = L.rmsnorm_apply(bp["ln"], x, cfg.norm_eps)
+            y, nconv, nssm = S.mamba_decode(bp["mamba"], h, conv, ssm, cfg,
+                                            compute_dtype=cfg.cdtype)
+            nconv = jax.tree.map(
+                lambda new, old: jnp.where(active[:, None, None], new, old),
+                nconv, conv)
+            nssm = jnp.where(active[:, None, None, None], nssm, ssm)
+            return x + y, (nconv, nssm)
+        convs, ssms, ks, vs = [], [], [], []
+        sp = params["shared"]
+        for gi in range(n_full):
+            sl = lambda a, g=gi: a[g * per:(g + 1) * per]
+            x, (nc, ns) = jax.lax.scan(
+                body, x, (jax.tree.map(sl, params["blocks"]),
+                          jax.tree.map(sl, cache["conv"]), sl(cache["ssm"])))
+            convs.append(nc); ssms.append(ns)
+            h = L.rmsnorm_apply(sp["ln1"], x, cfg.norm_eps)
+            h, nk, nv = A.attn_decode_slotted(
+                sp["attn"], h, cache["k"][gi], cache["v"][gi], pos, cfg,
+                active=active, window=window, compute_dtype=cfg.cdtype)
+            x = x + h
+            x = x + L.mlp_apply(sp["mlp"],
+                                L.rmsnorm_apply(sp["ln2"], x, cfg.norm_eps),
+                                cfg.mlp_kind, compute_dtype=cfg.cdtype)
+            ks.append(nk); vs.append(nv)
+        if tail:
+            sl = lambda a: a[n_full * per:]
+            x, (nc, ns) = jax.lax.scan(
+                body, x, (jax.tree.map(sl, params["blocks"]),
+                          jax.tree.map(sl, cache["conv"]), sl(cache["ssm"])))
+            convs.append(nc); ssms.append(ns)
+        cache = dict(cache,
+                     conv=jax.tree.map(lambda *xs: jnp.concatenate(xs, 0), *convs),
+                     ssm=jnp.concatenate(ssms, 0),
+                     k=jnp.stack(ks), v=jnp.stack(vs))
+    else:
+        raise ValueError(f"no slotted decode path for family {cfg.family!r}")
+
+    cache["pos"] = pos + active.astype(jnp.int32)
+    x = L.rmsnorm_apply(params["final_norm"], x, cfg.norm_eps)
+    if return_hidden:
+        return x, cache
+    if not cfg.tie_embeddings and "lm_head" in params:
+        logits = L.dense_apply(params["lm_head"], x,
+                               compute_dtype=cfg.cdtype).astype(jnp.float32)
+    else:
+        logits = L.unembed_apply(params["embed"], x, cfg.cdtype)
+    return logits, cache

@@ -1,1 +1,1 @@
-from . import engine, streaming  # noqa: F401
+from . import engine, scheduler, streaming  # noqa: F401

@@ -1,25 +1,41 @@
-"""Batched serving engine: prefill -> decode with KV/SSM caches, greedy or
-temperature sampling, optional L-S-Q quantized weights (the paper's
-deployment stage at LM scale).
+"""Continuous-batching LM serving engine on the shared slot scheduler.
+
+The paper's systems thesis — a tiny stateful cell plus careful scheduler/
+runtime work beats bigger budgets (Sec. VI; Saha et al. 2022 call the
+runtime the dominant efficiency lever) — applied at LM scale.  This engine
+is the LM half of the scheduler/program split (see ``serve/scheduler.py``):
+the :class:`~repro.serve.scheduler.SlotScheduler` owns placement (slot
+table, pending queue, FIFO admission, recycling, counters) and this module
+implements the :class:`~repro.serve.scheduler.SlotProgram` — per-slot KV /
+SSM cache rows, preallocated output buffers, and batched sampling.
 
 Design notes
 ------------
-* The engine is functional: ``ServeState`` carries (cache, tokens, done);
-  ``decode_loop`` drives jit-compiled single-token steps.
-* Quantized serving: ``quantize_for_serving`` produces a Q15/Q7 weight
-  pytree + scales via repro.core.quantization; weights are dequantized
-  on-the-fly inside the matmul (kernels/q15_matmul on TPU; jnp fallback
-  elsewhere) — decode is HBM-bound, so int8 weights halve the dominant
-  roofline term.
-* Activation LUTs: ``lut_mode`` routes sigma/tanh/silu/gelu through
-  repro.core.lut tables for deterministic cross-backend inference
-  (paper contribution (i) at serving scale).
-* Continuous batching (slot reuse) is provided in a simple form: finished
-  sequences are replaced by queued requests at window boundaries.
+* **True continuous batching**: a finished sequence's KV-cache slot is
+  re-prefilled from the pending queue on the next tick — not at window
+  boundaries.  The cache is a slot table (``models/transformer.
+  init_slot_cache``) with a per-slot fill level ``pos`` (S,); admission
+  writes one sequence's prefix into its slot (``prefill_into_slot``) while
+  the neighbours keep decoding, and every tick is ONE fixed-shape jit call
+  (``decode_step_slotted``) regardless of occupancy.
+* **Preallocated output**: generated tokens land in a fixed (S, cap) int32
+  buffer at a per-slot cursor — decode cost is O(T), not the O(T^2)
+  ``np.concatenate``-per-token of the old loop.
+* **Quantized serving**: ``quantize_for_serving`` produces a Q15/Q7 weight
+  pytree + scales via repro.core.quantization.  The backbone runs over
+  dequantized weights (decode is HBM-bound; int8 weights halve the
+  dominant roofline term on real hardware), and the sampling head — the
+  one matmul the engine itself owns — runs the *actual* integer weights
+  through ``kernels/q15_matmul`` (dequantize-inside-the-kernel), so the
+  quantized pytree is load-bearing, not decoration.
+* ``admit_policy="all_free"`` recovers the old window-boundary behaviour
+  (admit only when every slot is free) — kept as the measurable baseline
+  for ``benchmarks/serve_bench.py``.
 """
 from __future__ import annotations
 
 import dataclasses
+import itertools
 from typing import Any
 
 import jax
@@ -28,21 +44,27 @@ import numpy as np
 
 from repro.core import quantization as q
 from repro.models import transformer as T
+from repro.serve.scheduler import HostProgram, SlotScheduler, TickReport
 
 
 @dataclasses.dataclass
 class ServeConfig:
-    max_len: int = 2048
+    max_len: int = 2048             # per-slot KV capacity (prompt + new)
+    max_slots: int = 8              # resident batch width (decode batch)
     temperature: float = 0.0        # 0 -> greedy
     eos_id: int = -1                # -1 -> never stop early
     quant_bits: int = 0             # 0 off, 8, 16
     seed: int = 0
+    admit_policy: str = "any_free"  # "all_free" = window-boundary baseline
 
 
 def quantize_for_serving(params, bits: int = 8):
-    """Per-tensor symmetric PTQ of every >=2D weight leaf; biases/norms
-    stay fp.  Returns (qtree, scales, fp_leaves) — same recipe as the MCU
-    path (core/quantization.py), applied to the LM pytree."""
+    """Per-tensor symmetric PTQ of every >=2D floating weight leaf;
+    biases/norms/scalars stay fp.  Returns a 2-tuple ``(qtree, scales)``:
+    ``qtree`` mirrors ``params`` with int8/int16 weight leaves, ``scales``
+    mirrors it with the per-tensor dequant scale (a 0-d zero for leaves
+    that were left untouched) — same recipe as the MCU path
+    (core/quantization.py), applied to the LM pytree."""
     qmax = (1 << (bits - 1)) - 1
     dtype = jnp.int8 if bits == 8 else jnp.int16
     flat, treedef = jax.tree_util.tree_flatten_with_path(params)
@@ -69,62 +91,255 @@ def dequantize_params(qtree, scales):
 
 
 @dataclasses.dataclass
-class ServeState:
-    cache: Any
-    last_tokens: jax.Array          # (B, 1)
-    generated: np.ndarray           # (B, T_out) grown on host
-    done: np.ndarray                # (B,)
+class LMRequest:
+    """One queued generation: a prompt and a token budget."""
+    request_id: str
+    tokens: np.ndarray              # (s,) int32 prompt
+    max_new: int                    # total tokens to emit (incl. the first)
+    extra: dict | None = None       # e.g. vlm patch_embeds, (1, ...) rows
+
+
+@dataclasses.dataclass
+class Completion:
+    """Event surfaced by :meth:`Engine.tick` when a request leaves a slot."""
+    request_id: str
+    tokens: np.ndarray              # (n_emitted,) int32
+    finished: bool                  # False -> cancelled with partial output
 
 
 class Engine:
-    def __init__(self, cfg, params, serve_cfg: ServeConfig = ServeConfig()):
+    """Continuous-batching LM engine (prefill-into-slot + slotted decode)."""
+
+    def __init__(self, cfg, params, serve_cfg: ServeConfig | None = None):
         self.cfg = cfg
-        self.scfg = serve_cfg
-        if serve_cfg.quant_bits:
-            qt, sc = quantize_for_serving(params, serve_cfg.quant_bits)
-            self.params = dequantize_params(qt, sc)   # jnp fallback path
-            self.qparams, self.scales = qt, sc
+        self.scfg = scfg = serve_cfg or ServeConfig()
+        if scfg.quant_bits:
+            self.qparams, self.scales = quantize_for_serving(
+                params, scfg.quant_bits)
+            self.params = dequantize_params(self.qparams, self.scales)
+            # quantized head: logits come from the integer weights via the
+            # q15_matmul kernel, so decode/prefill return hidden states.
+            # The (K, V) integer head matrix is laid out once here (the
+            # tied path would otherwise transpose the whole embed table
+            # every tick) and the kernel call is jitted so the pad-to-tile
+            # runs compiled.
+            self._quant_head = True
+            if not cfg.tie_embeddings and "lm_head" in self.qparams:
+                head_wq = self.qparams["lm_head"]["w"]
+                head_scale = self.scales["lm_head"]["w"]
+            else:
+                head_wq = jnp.asarray(self.qparams["embed"]["table"]).T
+                head_scale = self.scales["embed"]["table"]
+            from repro.kernels.q15_matmul.ops import q15_matmul
+            self._head_fn = jax.jit(lambda x: q15_matmul(
+                x, head_wq, head_scale, out_dtype=jnp.float32))
         else:
             self.params = params
-        self._decode = jax.jit(
-            lambda p, c, t: T.decode_step(cfg, p, c, t))
-        self._key = jax.random.PRNGKey(serve_cfg.seed)
+            self.qparams = self.scales = None
+            self._quant_head = False
+            self._head_fn = None
+        S = scfg.max_slots
+        self.cache = T.init_slot_cache(cfg, S, scfg.max_len, dtype=cfg.cdtype)
+        self._decode = jax.jit(lambda p, c, t, a: T.decode_step_slotted(
+            cfg, p, c, t, a, return_hidden=self._quant_head))
+        self._prefills: dict[Any, Any] = {}     # prompt shape -> jitted fn
+        self._key = jax.random.PRNGKey(scfg.seed)
+        # --- per-slot host state (preallocated; written in place) -------
+        self._out = np.zeros((S, scfg.max_len), np.int32)   # token buffer
+        self._emitted = np.zeros(S, np.int64)               # out-buffer cursor
+        self._budget = np.zeros(S, np.int64)
+        self._eos_done = np.zeros(S, bool)
+        self._last = np.zeros((S, 1), np.int32)             # next decode input
+        self._results: dict[str, np.ndarray] = {}
+        self._rid_counter = itertools.count()
+        # telemetry
+        self._prefill_count = 0
+        self._decode_ticks = 0
+        self._tokens_generated = 0
+        self.sched = SlotScheduler(S, HostProgram(self),
+                                   admit_policy=scfg.admit_policy)
 
-    def _sample(self, logits):
-        if self.scfg.temperature <= 0:
-            return jnp.argmax(logits[:, -1, :], axis=-1)[:, None].astype(jnp.int32)
-        self._key, k = jax.random.split(self._key)
-        return jax.random.categorical(
-            k, logits[:, -1, :] / self.scfg.temperature)[:, None].astype(jnp.int32)
+    # ------------------------------------------------------------------
+    # Request API
+    # ------------------------------------------------------------------
+    def submit(self, tokens: np.ndarray, max_new: int, *,
+               request_id: str | None = None,
+               extra: dict | None = None) -> str:
+        """Queue one prompt for ``max_new`` generated tokens (the first is
+        sampled at prefill time, matching ``generate`` semantics).  Returns
+        the request id; the sequence prefills into a slot as soon as the
+        scheduler places it."""
+        tokens = np.asarray(tokens, np.int32)
+        if tokens.ndim != 1:
+            raise ValueError(f"prompt must be 1-D, got {tokens.shape}")
+        if not 1 <= max_new <= self.scfg.max_len:
+            raise ValueError(f"max_new must be in [1, {self.scfg.max_len}]")
+        n_extra = 0            # vlm patch embeddings occupy cache positions
+        if extra and "patch_embeds" in extra:
+            n_extra = int(np.asarray(extra["patch_embeds"]).shape[1])
+        if tokens.shape[0] + n_extra + max_new - 1 > self.scfg.max_len:
+            raise ValueError(
+                f"prompt ({tokens.shape[0]} tokens + {n_extra} patch "
+                f"positions) + max_new ({max_new}) exceeds "
+                f"max_len={self.scfg.max_len}")
+        rid = request_id if request_id is not None \
+            else f"r{next(self._rid_counter)}"
+        self.sched.submit(rid, LMRequest(rid, tokens, int(max_new), extra))
+        return rid
 
-    def prefill(self, tokens: np.ndarray, extra: dict | None = None) -> ServeState:
-        batch = {"tokens": jnp.asarray(tokens)}
-        if extra:
-            batch.update({k: jnp.asarray(v) for k, v in extra.items()})
-        logits, cache = T.prefill(self.cfg, self.params, batch,
-                                  max_len=self.scfg.max_len)
-        nxt = self._sample(logits)
-        b = tokens.shape[0]
-        return ServeState(cache=cache, last_tokens=nxt,
-                          generated=np.asarray(nxt),
-                          done=np.zeros(b, bool))
+    def tick(self) -> list[Completion]:
+        """One scheduling round: admit+prefill into free slots, one batched
+        decode step over all resident sequences, release finished slots."""
+        return self.sched.tick()
 
-    def decode(self, state: ServeState, steps: int) -> ServeState:
-        for _ in range(steps):
-            logits, state.cache = self._decode(self.params, state.cache,
-                                               state.last_tokens)
-            nxt = self._sample(logits)
-            state.last_tokens = nxt
-            host = np.asarray(nxt)
-            state.generated = np.concatenate([state.generated, host], axis=1)
-            if self.scfg.eos_id >= 0:
-                state.done |= (host[:, 0] == self.scfg.eos_id)
-                if state.done.all():
-                    break
-        return state
+    def run(self) -> list[Completion]:
+        """Tick until every submitted request has completed."""
+        events: list[Completion] = []
+        while self.sched.has_work():
+            events.extend(self.tick())
+        return events
+
+    def cancel(self, request_id: str) -> Completion:
+        """Withdraw a request.  Resident sequences yield their partial
+        tokens; a request still in the pending queue yields an empty
+        result — either way :meth:`result` works afterwards, so callers
+        need not know whether admission had happened yet."""
+        ev = self.sched.cancel(request_id)
+        if ev is None:                    # pending: nothing was emitted
+            self._results[request_id] = np.zeros((0,), np.int32)
+            ev = Completion(request_id, self._results[request_id].copy(),
+                            False)
+        return ev
+
+    def result(self, request_id: str) -> np.ndarray:
+        """Generated tokens of a completed/cancelled request (consumes it)."""
+        return self._results.pop(request_id)
 
     def generate(self, tokens: np.ndarray, max_new: int,
                  extra: dict | None = None) -> np.ndarray:
-        state = self.prefill(tokens, extra)
-        state = self.decode(state, max_new - 1)
-        return state.generated
+        """Batch convenience: run (B, s) prompts to completion and return
+        (B, max_new) tokens (continuous batching when B > max_slots; rows
+        that hit ``eos_id`` early are padded with it)."""
+        tokens = np.asarray(tokens, np.int32)
+        rids = []
+        for i in range(tokens.shape[0]):
+            row_extra = None
+            if extra:
+                row_extra = {k: np.asarray(v)[i:i + 1] for k, v in extra.items()}
+            rids.append(self.submit(tokens[i], max_new, extra=row_extra))
+        self.run()
+        pad = self.scfg.eos_id if self.scfg.eos_id >= 0 else 0
+        out = np.full((tokens.shape[0], max_new), pad, np.int32)
+        for i, rid in enumerate(rids):
+            row = self.result(rid)
+            out[i, :row.shape[0]] = row
+        return out
+
+    def stats(self) -> dict[str, Any]:
+        sched = self.sched.stats()
+        return {
+            "max_slots": self.scfg.max_slots,
+            "active": sched["active"],
+            "pending": sched["pending"],
+            "occupancy": sched["occupancy"],
+            "peak_active": sched["peak_active"],
+            "prefills": self._prefill_count,
+            "decode_ticks": self._decode_ticks,
+            "tokens_generated": self._tokens_generated,
+            "quant_bits": self.scfg.quant_bits,
+            # scheduler counters (admissions/recycles/spills/occupancy):
+            # shared observability surface with the streaming engine
+            "scheduler": sched,
+        }
+
+    # ------------------------------------------------------------------
+    # SlotProgram hooks (called by the scheduler via HostProgram)
+    # ------------------------------------------------------------------
+    def _admit_slot(self, slot: int, request_id: str, req: LMRequest,
+                    reset: bool) -> None:
+        # No reset_cache_slot here: prefill overwrites the SSM/conv rows
+        # entirely and the KV rows up to the prompt length, and everything
+        # past ``pos`` is masked out — a recycled slot cannot leak its
+        # previous occupant.  (reset_cache_slot exists for callers that
+        # want belt-and-braces hygiene; it copies the whole cache.)
+        batch = {"tokens": jnp.asarray(req.tokens[None, :])}
+        if req.extra:
+            batch.update({k: jnp.asarray(v) for k, v in req.extra.items()})
+        out, self.cache = self._prefill_fn(batch)(
+            self.params, self.cache, batch, slot)
+        logits = self._head_logits(out[:, -1:]) if self._quant_head \
+            else out[:, -1, :]
+        first = self._sample(logits)[0]
+        self._out[slot, 0] = first
+        self._emitted[slot] = 1
+        self._budget[slot] = req.max_new
+        self._last[slot, 0] = first
+        self._eos_done[slot] = (self.scfg.eos_id >= 0
+                                and first == self.scfg.eos_id)
+        self._prefill_count += 1
+        self._tokens_generated += 1
+
+    def _advance(self, resident: np.ndarray) -> TickReport:
+        need = resident & ~self._eos_done & (self._emitted < self._budget)
+        if need.any():
+            out, self.cache = self._decode(
+                self.params, self.cache, jnp.asarray(self._last),
+                jnp.asarray(need))
+            logits = self._head_logits(out) if self._quant_head \
+                else out[:, 0, :]
+            nxt = self._sample(logits)                    # (S,) batched
+            rows = np.nonzero(need)[0]
+            self._out[rows, self._emitted[rows]] = nxt[rows]
+            self._emitted[rows] += 1
+            self._last[rows, 0] = nxt[rows]
+            if self.scfg.eos_id >= 0:
+                self._eos_done[rows] |= (nxt[rows] == self.scfg.eos_id)
+            self._decode_ticks += 1
+            self._tokens_generated += int(rows.size)
+        finished = resident & (self._eos_done | (self._emitted >= self._budget))
+        fin_rows = np.nonzero(finished)[0].tolist()
+        events = [Completion(self.sched.request_at(s),
+                             self._out[s, :self._emitted[s]].copy(), True)
+                  for s in fin_rows]
+        return TickReport(events=events, finished=fin_rows,
+                          advanced=int(need.sum()))
+
+    def _release_slot(self, slot: int, request_id: str,
+                      reason: str) -> Completion | None:
+        toks = self._out[slot, :self._emitted[slot]].copy()
+        self._results[request_id] = toks
+        self._emitted[slot] = 0
+        self._budget[slot] = 0
+        self._eos_done[slot] = False
+        if reason == "cancelled":
+            return Completion(request_id, toks, False)
+        return None
+
+    # ------------------------------------------------------------------
+    # Internals
+    # ------------------------------------------------------------------
+    def _prefill_fn(self, batch):
+        """jit'd prefill-into-slot, cached per prompt geometry (the slot
+        index is a traced argument, so admission never retraces)."""
+        key = tuple(sorted((k, v.shape) for k, v in batch.items()))
+        fn = self._prefills.get(key)
+        if fn is None:
+            fn = jax.jit(lambda p, c, b, s: T.prefill_into_slot(
+                self.cfg, p, c, b, s, return_hidden=self._quant_head))
+            self._prefills[key] = fn
+        return fn
+
+    def _head_logits(self, hidden) -> jax.Array:
+        """Sampling head over the *integer* quantized weights via the
+        q15_matmul kernel (dequantize-inside-the-kernel) — the previously
+        dead ``qparams``/``scales`` doing real work.  hidden: (n, 1, D) or
+        (n, s, D); uses the last position.  -> (n, V) f32."""
+        return self._head_fn(hidden[:, -1, :].astype(jnp.float32))
+
+    def _sample(self, logits) -> np.ndarray:
+        """(n, V) -> (n,) int32, greedy or temperature (batched)."""
+        if self.scfg.temperature <= 0:
+            return np.asarray(jnp.argmax(logits, axis=-1), np.int32)
+        self._key, k = jax.random.split(self._key)
+        return np.asarray(jax.random.categorical(
+            k, logits / self.scfg.temperature), np.int32)

@@ -5,20 +5,23 @@ live 50 Hz tri-axial accelerometer stream in real time.  This module is the
 server-side analogue of a *fleet* of such sensors: thousands of concurrent
 stateful sessions (one hidden state + warm-up counter each) stepped in
 lockstep by the batched Q15 single-step kernel
-(``kernels/fastgrnn_cell.ops.Q15StreamStep``), with slot-based continuous
-batching modeled on ``serve/engine.py`` — streams attach and detach at step
-boundaries, and finished or detached slots are recycled from a pending
-queue.
+(``kernels/fastgrnn_cell.ops.Q15StreamStep``).
 
-Session bookkeeping is a **NumPy slot table**, not per-session Python
-objects: per-slot step counters, window positions, stream lengths and
-sample cursors are columns of (S,)-shaped arrays, and buffered samples
-live in one (S, cap, d) ring buffer, so a tick costs a handful of
-vectorized ops + one fancy-index gather instead of a Python loop over
-every resident stream.  (The per-session-object version bound throughput
-at ~0.5M steps/s with the kernel math taking a minority of the tick; see
-BENCH_streaming.json for the slot-table numbers.)  Python loops remain
-only on the rare paths: admission, completion, and event emission.
+Placement — which stream occupies which resident slot, FIFO admission from
+the pending queue, slot recycling when a stream finishes or detaches — is
+delegated to the engine-agnostic :class:`repro.serve.scheduler.SlotScheduler`;
+this module implements the workload half of that split (the
+:class:`~repro.serve.scheduler.SlotProgram` protocol): per-slot FastGRNN
+state, sample rings, window counters, and event emission.  The LM engine
+(``serve/engine.py``) rides the identical scheduler.
+
+Workload state is a **NumPy slot table**, not per-session Python objects:
+per-slot step counters, window positions, stream lengths and sample
+cursors are columns of (S,)-shaped arrays, and buffered samples live in
+one (S, cap, d) ring buffer, so a tick costs a handful of vectorized ops +
+one fancy-index gather instead of a Python loop over every resident
+stream.  Python loops remain only on the rare paths: admission,
+completion, and event emission.
 
 Determinism contract: with the default ``backend="exact"`` every stream's
 hidden trajectory, logits and predictions are **bit-identical** to running
@@ -55,6 +58,7 @@ import numpy as np
 
 from repro.core import quantization as q
 from repro.kernels.fastgrnn_cell.ops import Q15StreamStep
+from repro.serve.scheduler import HostProgram, SlotScheduler, TickReport
 
 
 @dataclasses.dataclass(frozen=True)
@@ -89,9 +93,11 @@ class StreamEvent:
 class _Session:
     """Thin per-stream handle.  Counters/cursors live in the engine's slot
     table; this only tracks identity, placement, the not-yet-placed sample
-    chunks of pending streams, and the trajectory-tap flag."""
+    chunks of pending streams, the finite-length target, and the
+    trajectory-tap flag."""
     stream_id: str
     slot: int = -1                       # -1 -> pending (no resident slot)
+    total: int | None = None             # finite stream length; None = open
     chunks: collections.deque = dataclasses.field(
         default_factory=collections.deque)   # buffered while pending
     record_trajectory: bool = False
@@ -100,14 +106,15 @@ class _Session:
 class StreamingEngine:
     """Slot-based continuous batching of stateful FastGRNN sessions."""
 
-    def __init__(self, params_or_qp, config: StreamingConfig = StreamingConfig(),
-                 *, quant: q.QuantConfig = q.QuantConfig(),
+    def __init__(self, params_or_qp, config: StreamingConfig | None = None,
+                 *, quant: q.QuantConfig | None = None,
                  act_scales: dict[str, float] | None = None,
                  naive_acts: bool = False):
         if isinstance(params_or_qp, q.QuantizedParams):
             self.qp = params_or_qp
         else:  # float param pytree -> per-tensor Q15 PTQ (Appendix B)
-            self.qp = q.quantize_params(params_or_qp, quant)
+            self.qp = q.quantize_params(params_or_qp, quant or q.QuantConfig())
+        config = config or StreamingConfig()
         self.config = config
         self.kernel = Q15StreamStep(self.qp, act_scales=act_scales,
                                     naive_acts=naive_acts,
@@ -116,30 +123,23 @@ class StreamingEngine:
         S, d = config.max_slots, self.kernel.input_dim
         self._h = self.kernel.init_state(S)
         self._x = np.zeros((S, d), np.float32)
-        # --- slot table (vectorized bookkeeping) -----------------------
+        # --- slot table (vectorized workload state) --------------------
         self._steps = np.zeros(S, np.int64)      # samples consumed
         self._wstep = np.zeros(S, np.int64)      # position in current window
         self._total = np.full(S, -1, np.int64)   # finite length; -1 = open
-        self._resident = np.zeros(S, bool)
         self._head = np.zeros(S, np.int64)       # ring read cursor (absolute)
         self._tail = np.zeros(S, np.int64)       # ring write cursor (absolute)
         self._cap = max(8, min(config.ring_capacity, config.max_ring_capacity))
         self._ring = np.zeros((S, self._cap, d), np.float32)
         self._spill: dict[int, collections.deque] = {}  # slot -> chunk queue
         self._tap = np.zeros(S, bool)            # trajectory-tap flag
-        # --- identity / lifecycle -------------------------------------
+        # --- placement: delegated to the shared slot scheduler ---------
+        self._sched = SlotScheduler(S, HostProgram(self))
         self._sessions: dict[str, _Session] = {}
-        self._slot_owner: list[str | None] = [None] * S
-        self._free: list[int] = list(range(S - 1, -1, -1))
-        self._dirty = np.zeros(S, bool)          # freed slots, stale state
-        self._pending: collections.deque[str] = collections.deque()
-        self._pending_total: dict[str, int | None] = {}
         self._trajectories: dict[str, list[np.ndarray]] = {}
-        # telemetry
-        self._ticks = 0
+        # telemetry (workload side; placement counters live in the scheduler)
         self._stream_steps = 0
-        self._completed = 0
-        self._peak_active = 0
+        self._ring_spills = 0
 
     # ------------------------------------------------------------------
     # Session lifecycle
@@ -159,20 +159,16 @@ class StreamingEngine:
         """
         if stream_id in self._sessions:
             raise ValueError(f"stream {stream_id!r} already attached")
-        s = _Session(stream_id=stream_id, record_trajectory=record_trajectory)
+        s = _Session(stream_id=stream_id, total=total_steps,
+                     record_trajectory=record_trajectory)
         self._sessions[stream_id] = s
-        self._pending_total[stream_id] = total_steps
         if record_trajectory:
             self._trajectories[stream_id] = []
         if samples is not None:
             self.feed(stream_id, samples)
-        # FIFO fairness: a free slot goes to the new stream only when no
-        # earlier stream is already waiting, else the queue would starve
-        if self._free and not self._pending:
-            self._place(s, self._free.pop())
-            return "active"
-        self._pending.append(stream_id)
-        return "pending"
+        # the scheduler preserves FIFO fairness: a free slot goes to the
+        # new stream only when no earlier stream is already waiting
+        return self._sched.submit(stream_id, s)
 
     def feed(self, stream_id: str, samples: np.ndarray) -> None:
         """Append samples ((d,) or (k, d)) to a stream's input buffer."""
@@ -193,76 +189,22 @@ class StreamingEngine:
         """Terminate a stream at a step boundary.  If it consumed samples
         since its last window emission, a ``"final"`` event for the partial
         window is returned; its slot is recycled to the pending queue."""
-        s = self._sessions.pop(stream_id)
-        ev = None
-        if s.slot >= 0:
-            slot = s.slot
-            if self._wstep[slot] > 0:
-                logits = self.kernel.head_logits(self._h[slot:slot + 1])[0]
-                ev = self._event(stream_id, slot, "final",
-                                 int(self._wstep[slot]), logits)
-            self._release(slot)
-        else:
-            self._pending.remove(stream_id)
-            self._pending_total.pop(stream_id, None)
-        self._completed += 1
-        return ev
+        if stream_id not in self._sessions:
+            raise KeyError(f"stream {stream_id!r} is not attached")
+        ev = self._sched.cancel(stream_id)
+        self._sessions.pop(stream_id, None)   # pending path (resident path
+        return ev                             # popped in _release_slot)
 
     # ------------------------------------------------------------------
     # Stepping
     # ------------------------------------------------------------------
     def step(self) -> list[StreamEvent]:
-        """One synchronous tick: admit pending streams into free slots,
-        advance every resident stream that has a buffered sample by exactly
-        one step, and emit window/final events.  Streams without buffered
-        samples idle (hidden state held bit-for-bit)."""
-        self._admit()
-        avail = self._resident & (self._tail > self._head)
-        rows = np.nonzero(avail)[0]
-        if rows.size == 0:
-            return []
-        # gather one sample per advancing slot from the ring (vectorized)
-        x = self._x
-        x[:] = 0.0
-        x[rows] = self._ring[rows, self._head[rows] % self._cap]
-        self._h = self.kernel.step(self._h, x, avail)
-        self._head[rows] += 1
-        self._steps[rows] += 1
-        self._wstep[rows] += 1
-        self._ticks += 1
-        self._stream_steps += int(rows.size)
-        if self._spill:
-            self._drain_spill()
-
-        if np.any(self._tap[rows]):
-            for i in np.nonzero(self._tap & avail)[0]:
-                sid = self._slot_owner[i]
-                self._trajectories[sid].append(self._h[i].copy())
-
-        # emission: window boundaries + finished streams (rare -> loops)
-        window = self.config.window
-        at_window = avail & (self._wstep == window)
-        finished = avail & (self._total >= 0) & (self._steps >= self._total)
-        emit_rows = np.nonzero(at_window | finished)[0]
-        events: list[StreamEvent] = []
-        if emit_rows.size:
-            logits = self.kernel.head_logits(self._h[emit_rows])
-            for i, slot in enumerate(emit_rows):
-                kind = "window" if at_window[slot] else "final"
-                events.append(self._event(
-                    self._slot_owner[slot], int(slot), kind,
-                    int(self._wstep[slot]), logits[i]))
-
-        if np.any(at_window):
-            self._wstep[at_window] = 0
-            if self.config.reset_on_emit:
-                self._h = self.kernel.reset(self._h, at_window)
-        for slot in np.nonzero(finished)[0]:
-            sid = self._slot_owner[slot]
-            del self._sessions[sid]
-            self._release(int(slot))
-            self._completed += 1
-        return events
+        """One synchronous tick: the scheduler admits pending streams into
+        free slots, the program advances every resident stream that has a
+        buffered sample by exactly one step, and window/final events are
+        emitted.  Streams without buffered samples idle (hidden state held
+        bit-for-bit)."""
+        return self._sched.tick()
 
     def drain(self) -> list[StreamEvent]:
         """Tick until no resident or pending stream can advance (buffers
@@ -271,7 +213,7 @@ class StreamingEngine:
         while self._any_buffered():
             out = self.step()
             if not out and not bool(np.any(
-                    self._resident & (self._tail > self._head))):
+                    self._sched.resident & (self._tail > self._head))):
                 break  # only pending streams hold samples and no slot frees
             events.extend(out)
         return events
@@ -289,10 +231,89 @@ class StreamingEngine:
         return (np.stack(rows) if rows else np.zeros((0, H), np.float32))
 
     # ------------------------------------------------------------------
+    # SlotProgram hooks (called by the scheduler via HostProgram)
+    # ------------------------------------------------------------------
+    def _admit_slot(self, slot: int, stream_id: str, s: _Session,
+                    reset: bool) -> None:
+        s.slot = slot
+        if reset:  # recycled slot: zero the previous stream's hidden state
+            self._h = self.kernel.reset(
+                self._h, np.arange(self.config.max_slots) == slot)
+        self._steps[slot] = 0
+        self._wstep[slot] = 0
+        self._total[slot] = -1 if s.total is None else int(s.total)
+        self._head[slot] = 0
+        self._tail[slot] = 0
+        self._tap[slot] = s.record_trajectory
+        while s.chunks:
+            self._ring_write(slot, s.chunks.popleft())
+
+    def _advance(self, resident: np.ndarray) -> TickReport:
+        avail = resident & (self._tail > self._head)
+        rows = np.nonzero(avail)[0]
+        if rows.size == 0:
+            return TickReport()
+        # gather one sample per advancing slot from the ring (vectorized)
+        x = self._x
+        x[:] = 0.0
+        x[rows] = self._ring[rows, self._head[rows] % self._cap]
+        self._h = self.kernel.step_rows(self._h, x, avail, rows)
+        self._head[rows] += 1
+        self._steps[rows] += 1
+        self._wstep[rows] += 1
+        self._stream_steps += int(rows.size)
+        if self._spill:
+            self._drain_spill()
+
+        if np.any(self._tap[rows]):
+            for i in np.nonzero(self._tap & avail)[0]:
+                sid = self._sched.request_at(i)
+                self._trajectories[sid].append(self._h[i].copy())
+
+        # emission: window boundaries + finished streams (rare -> loops)
+        window = self.config.window
+        at_window = avail & (self._wstep == window)
+        finished = avail & (self._total >= 0) & (self._steps >= self._total)
+        emit_rows = np.nonzero(at_window | finished)[0]
+        events: list[StreamEvent] = []
+        if emit_rows.size:
+            logits = self.kernel.head_logits(self._h[emit_rows])
+            for i, slot in enumerate(emit_rows):
+                kind = "window" if at_window[slot] else "final"
+                events.append(self._event(
+                    self._sched.request_at(int(slot)), int(slot), kind,
+                    int(self._wstep[slot]), logits[i]))
+
+        if np.any(at_window):
+            self._wstep[at_window] = 0
+            if self.config.reset_on_emit:
+                self._h = self.kernel.reset(self._h, at_window)
+        return TickReport(events=events,
+                          finished=np.nonzero(finished)[0].tolist(),
+                          advanced=int(rows.size))
+
+    def _release_slot(self, slot: int, stream_id: str,
+                      reason: str) -> StreamEvent | None:
+        ev = None
+        if reason == "cancelled" and self._wstep[slot] > 0:
+            # detach mid-window: emit the partial-window prediction
+            logits = self.kernel.head_logits(self._h[slot:slot + 1])[0]
+            ev = self._event(stream_id, slot, "final",
+                             int(self._wstep[slot]), logits)
+        s = self._sessions.pop(stream_id, None)
+        if s is not None:
+            s.slot = -1
+        self._tap[slot] = False
+        self._head[slot] = 0
+        self._tail[slot] = 0
+        self._spill.pop(slot, None)
+        return ev
+
+    # ------------------------------------------------------------------
     # Internals
     # ------------------------------------------------------------------
     def _any_buffered(self) -> bool:
-        if bool(np.any(self._resident & (self._tail > self._head))):
+        if bool(np.any(self._sched.resident & (self._tail > self._head))):
             return True
         if self._spill:
             return True
@@ -316,6 +337,7 @@ class StreamingEngine:
             self._tail[slot] += take
         if take < k:                     # backlog beyond the shared ring
             self._spill[slot] = collections.deque([samples[take:]])
+            self._ring_spills += 1
 
     def _drain_spill(self) -> None:
         """Refill rings from spilled backlogs as space frees (rare path —
@@ -355,41 +377,6 @@ class StreamingEngine:
         self._tail[:] = navail
         self._ring, self._cap = ring, new_cap
 
-    def _place(self, s: _Session, slot: int) -> None:
-        s.slot = slot
-        self._slot_owner[slot] = s.stream_id
-        if self._dirty[slot]:  # recycled slot: zero the previous state
-            self._h = self.kernel.reset(
-                self._h, np.arange(self.config.max_slots) == slot)
-            self._dirty[slot] = False
-        self._steps[slot] = 0
-        self._wstep[slot] = 0
-        total = self._pending_total.pop(s.stream_id, None)
-        self._total[slot] = -1 if total is None else int(total)
-        self._resident[slot] = True
-        self._head[slot] = 0
-        self._tail[slot] = 0
-        self._tap[slot] = s.record_trajectory
-        while s.chunks:
-            self._ring_write(slot, s.chunks.popleft())
-        n_active = self.config.max_slots - len(self._free)
-        self._peak_active = max(self._peak_active, n_active)
-
-    def _release(self, slot: int) -> None:
-        self._slot_owner[slot] = None
-        self._dirty[slot] = True
-        self._resident[slot] = False
-        self._tap[slot] = False
-        self._head[slot] = 0
-        self._tail[slot] = 0
-        self._spill.pop(slot, None)
-        self._free.append(slot)
-
-    def _admit(self) -> None:
-        while self._free and self._pending:
-            sid = self._pending.popleft()
-            self._place(self._sessions[sid], self._free.pop())
-
     def _event(self, stream_id: str, slot: int, kind: str, window_step: int,
                logits: np.ndarray) -> StreamEvent:
         steps = int(self._steps[slot])
@@ -405,23 +392,28 @@ class StreamingEngine:
     # ------------------------------------------------------------------
     @property
     def n_active(self) -> int:
-        return self.config.max_slots - len(self._free)
+        return self._sched.n_active
 
     @property
     def n_pending(self) -> int:
-        return len(self._pending)
+        return self._sched.n_pending
 
     def stats(self) -> dict[str, Any]:
+        sched = self._sched.stats()
         return {
             "backend": self.config.backend,
             "max_slots": self.config.max_slots,
-            "active": self.n_active,
-            "pending": self.n_pending,
-            "peak_active": self._peak_active,
-            "ticks": self._ticks,
+            "active": sched["active"],
+            "pending": sched["pending"],
+            "peak_active": sched["peak_active"],
+            "ticks": sched["ticks"],
             "stream_steps": self._stream_steps,
-            "completed": self._completed,
+            "completed": sched["completed"] + sched["cancelled"],
             "ring_capacity": self._cap,
+            "ring_spills": self._ring_spills,
+            # scheduler counters (admissions/recycles/spills/occupancy):
+            # the observability surface the sharded-streaming work needs
+            "scheduler": sched,
         }
 
 

@@ -184,6 +184,83 @@ def test_duplicate_attach_rejected(qp):
 
 
 # ---------------------------------------------------------------------------
+# Edge cases the scheduler refactor must not break
+# ---------------------------------------------------------------------------
+
+def test_feed_after_detach_raises(qp, windows):
+    eng = StreamingEngine(qp, StreamingConfig(max_slots=2))
+    eng.attach("s", windows[0][:10])
+    eng.drain()
+    eng.detach("s")
+    with pytest.raises(KeyError):
+        eng.feed("s", windows[0][10:20])
+    with pytest.raises(KeyError):
+        eng.detach("s")                      # double detach
+
+
+def test_duplicate_attach_rejected_while_pending(qp, windows):
+    """A stream waiting in the pending queue still owns its id."""
+    eng = StreamingEngine(qp, StreamingConfig(max_slots=1))
+    eng.attach("a", windows[0], total_steps=128)
+    assert eng.attach("b", windows[1], total_steps=128) == "pending"
+    with pytest.raises(ValueError):
+        eng.attach("b", windows[1])
+    ev = eng.detach("b")                     # detach while pending: no event
+    assert ev is None
+    eng.attach("b", windows[1], total_steps=128)   # id reusable afterwards
+    events = eng.drain()
+    by_id = {e.stream_id: e for e in events}
+    ref = QRuntime(qp)
+    np.testing.assert_array_equal(
+        by_id["b"].logits.view(np.int32),
+        ref.run_window(windows[1]).view(np.int32))
+
+
+def test_ring_growth_under_spill_pressure(qp, windows):
+    """Feed one stream far beyond max_ring_capacity: the ring grows to its
+    cap, the overflow spills to the chunk queue, drains back as the ring
+    frees — and the result is still bit-identical to the scalar replay."""
+    cfg = StreamingConfig(max_slots=2, ring_capacity=8, max_ring_capacity=32)
+    eng = StreamingEngine(qp, cfg)
+    stream = np.concatenate([windows[k] for k in range(3)])   # 384 samples
+    eng.attach("s")
+    eng.feed("s", stream)                    # 384 >> 32: deep backlog
+    st = eng.stats()
+    assert st["ring_capacity"] == 32         # grew 8 -> 32 and capped
+    assert st["ring_spills"] >= 1            # overflow hit the spill queue
+    events = eng.drain()
+    assert [e.kind for e in events] == ["window"] * 3
+    rt = QRuntime(qp)
+    for k, e in enumerate(events):
+        np.testing.assert_array_equal(
+            e.logits.view(np.int32), rt.run_window(windows[k]).view(np.int32))
+    assert eng.stats()["stream_steps"] == 384
+
+
+def test_drain_with_empty_pending_queue(qp, windows):
+    eng = StreamingEngine(qp, StreamingConfig(max_slots=2))
+    assert eng.drain() == []                 # nothing attached at all
+    eng.attach("idle")                       # attached but never fed
+    assert eng.drain() == []
+    assert eng.n_active == 1 and eng.n_pending == 0
+
+
+def test_scheduler_counters_surfaced_in_stats(qp, windows):
+    eng = StreamingEngine(qp, StreamingConfig(max_slots=2))
+    for i in range(4):
+        eng.attach(f"s{i}", windows[i], total_steps=128)
+    eng.drain()
+    st = eng.stats()
+    sched = st["scheduler"]
+    assert sched["admissions"] == 4
+    assert sched["recycles"] == 2            # generation 2 reused slots
+    assert sched["spills"] == 2              # two streams had to queue
+    assert sched["completed"] == 4
+    assert sched["occupancy"] == 0.0         # everything finished
+    assert st["completed"] == 4 and st["peak_active"] == 2
+
+
+# ---------------------------------------------------------------------------
 # Activation-storage modes (Table V) ride through the batched path
 # ---------------------------------------------------------------------------
 
