@@ -35,6 +35,15 @@ SCHEMAS: dict[str, dict] = {
         "top": ["benchmark", "model", "host", "image", "budgets", "qvm",
                 "c_host", "parity", "mcu_cycle_model"],
     },
+    # `python -m repro.compress --report`: one compression-pipeline run.
+    # `size` is ModelArtifact.size_report() — per-tensor dense vs
+    # CSR-packed bytes at the artifact's true weight width (Q15/Q7).
+    "compress_artifact": {
+        "top": ["benchmark", "pipeline", "sha256", "artifact_bytes",
+                "size", "provenance"],
+        "size": ["bits", "weight_bytes_dense", "weight_bytes_packed",
+                 "tensors", "passes"],
+    },
 }
 
 
@@ -68,6 +77,14 @@ def validate(path: str) -> tuple[str | None, list[str]]:
     for key in schema["top"]:
         if key not in record:
             errors.append(f"{path}: missing top-level key {key!r}")
+    if "size" in schema:
+        size = record.get("size")
+        if not isinstance(size, dict):
+            errors.append(f"{path}: 'size' must be a size-report object")
+        else:
+            for key in schema["size"]:
+                if key not in size:
+                    errors.append(f"{path}: size missing key {key!r}")
     rows = record.get("results")
     if "row" in schema:
         if not isinstance(rows, list) or not rows:

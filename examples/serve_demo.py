@@ -3,9 +3,11 @@
     PYTHONPATH=src python examples/serve_demo.py --arch mamba2-780m
 
 Runs a reduced model through the serving engine twice — bf16 weights and
-int8 (Q7) per-tensor quantized weights (the paper's Q stage at LM scale) —
-and reports tokens generated, agreement between the two paths, and the
-analytic HBM-byte saving for the full config.
+int8 (Q7) per-tensor quantized weights (the paper's Q stage at LM scale,
+via the same ``repro.compress.quantize_tree`` pass the engine uses
+internally) — and reports tokens generated, agreement between the two
+paths, the per-tree weight-byte saving, and the analytic HBM-byte saving
+for the full config.
 """
 import argparse
 
@@ -13,6 +15,7 @@ import jax
 import numpy as np
 
 import repro.configs as C
+from repro.compress import tree_size_report
 from repro.models import registry
 from repro.serve.engine import Engine, ServeConfig
 
@@ -42,6 +45,14 @@ print(f"scheduler: {sched['admissions']} admissions, "
       f"(continuous batching via serve/scheduler.py)")
 print(f"bf16-vs-int8 token agreement: {agree*100:.1f}% "
       f"(greedy, random-init model — trained models track much closer)")
+
+# the engine quantized through repro.compress.quantize_tree (the single
+# home of the PTQ math); audit the quantized pytree it actually serves
+srep = tree_size_report(q8.qparams, bits=8)
+print(f"quantized tree: {srep['quantized_params']} int8 params, "
+      f"{srep['weight_bytes_quantized']/1e6:.2f} MB vs "
+      f"{srep['weight_bytes_bf16']/1e6:.2f} MB bf16 "
+      f"({srep['compression_ratio']:.2f}x)")
 
 n = registry.param_count(full)
 print(f"full {args.arch}: {n/1e9:.2f}B params -> weight bytes/decode-step "

@@ -1,0 +1,37 @@
+"""repro.compress — composable compression passes + the `ModelArtifact`.
+
+The paper's spine (low-rank -> IHT sparsity -> per-tensor PTQ ->
+activation calibration -> deploy) as a sequence of pure, deterministic
+passes over one versioned, serializable artifact:
+
+  * :mod:`.artifact` — :class:`ModelArtifact`: the single handoff object
+    every runtime consumes (``core/qruntime``, ``serve/streaming``,
+    ``deploy/image``), with per-pass provenance, a deterministic ``.fgar``
+    binary format, and a CSR-aware ``size_report``;
+  * :mod:`.passes`   — the :class:`Pass` protocol and the concrete stages
+    ``LowRankFactor``, ``IHTSparsify``, ``QuantizePTQ`` (Q15 *and* Q7),
+    ``CalibrateActivations`` (deploy / storage scopes), ``PackLUT``;
+  * :mod:`.pipeline` — :class:`Pipeline` composition, a JSON config
+    loader, and the paper's ``default_deploy_pipeline``;
+  * :mod:`.tree`     — pytree PTQ for LM serving (the single home of the
+    math formerly duplicated in ``serve/engine.quantize_for_serving``).
+
+CLI: ``python -m repro.compress --preset q15-deploy --out model.fgar``
+(see ``python -m repro.compress --help``).
+"""
+from .artifact import ARTIFACT_VERSION, ModelArtifact
+from .passes import (BITS_ALIASES, CalibrateActivations, IHTSparsify,
+                     LowRankFactor, PackLUT, Pass, QuantizePTQ,
+                     resolve_windows)
+from .pipeline import (PASS_REGISTRY, Pipeline, compress,
+                       default_deploy_pipeline, pipeline_from_config)
+from .tree import dequantize_tree, quantize_tree, tree_size_report
+
+__all__ = [
+    "ARTIFACT_VERSION", "ModelArtifact",
+    "BITS_ALIASES", "Pass", "LowRankFactor", "IHTSparsify", "QuantizePTQ",
+    "CalibrateActivations", "PackLUT", "resolve_windows",
+    "PASS_REGISTRY", "Pipeline", "compress", "default_deploy_pipeline",
+    "pipeline_from_config",
+    "quantize_tree", "dequantize_tree", "tree_size_report",
+]

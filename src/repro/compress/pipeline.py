@@ -1,0 +1,95 @@
+"""`Pipeline` — deterministic composition of compression passes.
+
+A pipeline is just an ordered tuple of :class:`~repro.compress.passes.Pass`
+objects run left to right over one
+:class:`~repro.compress.artifact.ModelArtifact`; every pass appends its own
+provenance record, so the finished artifact carries the full recipe that
+produced it.  ``pipeline_from_config`` builds one from a JSON-able config
+(the ``python -m repro.compress`` CLI input), and
+``default_deploy_pipeline`` is the paper's PTQ -> deploy-calibration ->
+LUT recipe used by ``deploy/goldens.build_reference_artifact``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Iterable
+
+from .artifact import ModelArtifact
+from .passes import (CalibrateActivations, IHTSparsify, LowRankFactor,
+                     PackLUT, Pass, QuantizePTQ)
+
+PASS_REGISTRY: dict[str, type] = {
+    "low_rank": LowRankFactor,
+    "iht_sparsify": IHTSparsify,
+    "quantize_ptq": QuantizePTQ,
+    "calibrate_activations": CalibrateActivations,
+    "pack_lut": PackLUT,
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class Pipeline:
+    """Ordered, pure composition of passes (one artifact in, one out)."""
+    passes: tuple[Pass, ...]
+    name: str = "compress"
+
+    def __post_init__(self):
+        object.__setattr__(self, "passes", tuple(self.passes))
+
+    def run(self, artifact: ModelArtifact) -> ModelArtifact:
+        for p in self.passes:
+            artifact = p.apply(artifact)
+        return artifact
+
+    def describe(self) -> list[dict[str, Any]]:
+        return [{"pass": p.name, "config": p.config()} for p in self.passes]
+
+
+def pipeline_from_config(cfg: Iterable[dict[str, Any]] | dict[str, Any],
+                         name: str = "compress") -> Pipeline:
+    """Build a pipeline from a JSON config: either a list of pass specs
+    ``[{"pass": "quantize_ptq", "bits": 15}, ...]`` or a dict with a
+    ``"passes"`` key holding that list.  Unknown pass names or kwargs fail
+    loudly (determinism gate: a config typo must not silently change the
+    recipe)."""
+    if isinstance(cfg, dict):
+        name = cfg.get("name", name)
+        cfg = cfg["passes"]
+    passes = []
+    for spec in cfg:
+        spec = dict(spec)
+        kind = spec.pop("pass")
+        cls = PASS_REGISTRY.get(kind)
+        if cls is None:
+            raise ValueError(f"unknown pass {kind!r} "
+                             f"(known: {sorted(PASS_REGISTRY)})")
+        for k in ("leaves", "float_leaves", "kinds"):
+            if k in spec and isinstance(spec[k], list):
+                spec[k] = tuple(spec[k])
+        passes.append(cls(**spec))
+    return Pipeline(passes=tuple(passes), name=name)
+
+
+def default_deploy_pipeline(bits: int = 15,
+                            calib: Any = "hapt:train:5",
+                            headroom: float = 0.10,
+                            sparsity: float | None = None) -> Pipeline:
+    """The paper's deployment recipe: [IHT ->] PTQ -> deploy calibration ->
+    LUT pack.  ``bits=15`` reproduces the historical Q15 export exactly;
+    ``bits=7`` is the Q7 path (same image format, int8-range weights)."""
+    passes: list[Pass] = []
+    if sparsity:
+        passes.append(IHTSparsify(sparsity=sparsity))
+    passes += [
+        QuantizePTQ(bits=bits),
+        CalibrateActivations(windows=calib, headroom=headroom,
+                             scope="deploy"),
+        PackLUT(),
+    ]
+    return Pipeline(passes=tuple(passes),
+                    name=f"deploy-q{'15' if bits in (15, 16) else '7'}")
+
+
+def compress(params: dict[str, Any], pipeline: Pipeline) -> ModelArtifact:
+    """One-call convenience: wrap a float checkpoint and run a pipeline."""
+    return pipeline.run(ModelArtifact.from_params(params))

@@ -1,0 +1,85 @@
+"""Pytree PTQ for LM-scale serving — the single home of the quantization
+math that used to live (duplicated) in ``serve/engine.quantize_for_serving``.
+
+Same per-tensor symmetric recipe as the MCU path
+(``core.quantization.quantize_tensor``), applied to an arbitrary nested
+parameter pytree: every floating leaf with ``ndim >= 2`` is quantized to
+int8 (Q7) or int16 (Q15); biases, norms and scalars pass through in float.
+``serve/engine.Engine`` consumes these directly; the old
+``quantize_for_serving`` / ``dequantize_params`` names remain as
+deprecation shims for one release.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import quantization as q
+from .passes import BITS_ALIASES
+
+
+def quantize_tree(params, bits: int = 8):
+    """Per-tensor symmetric PTQ of every >=2D floating weight leaf;
+    biases/norms/scalars stay fp.  ``bits`` accepts Q-format (7/15) or
+    storage-width (8/16) names.  Returns a 2-tuple ``(qtree, scales)``:
+    ``qtree`` mirrors ``params`` with int8/int16 weight leaves, ``scales``
+    mirrors it with the per-tensor dequant scale (a 0-d zero for leaves
+    that were left untouched)."""
+    bits = BITS_ALIASES.get(bits, bits)
+    if bits not in (8, 16):
+        raise ValueError(f"bits must be Q7/int8 or Q15/int16: {bits}")
+    qmax = (1 << (bits - 1)) - 1
+    dtype = jnp.int8 if bits == 8 else jnp.int16
+    flat, treedef = jax.tree_util.tree_flatten_with_path(params)
+    qt, scales = [], []
+    for path, leaf in flat:
+        if leaf.ndim >= 2 and jnp.issubdtype(leaf.dtype, jnp.floating):
+            qi, s = q.quantize_tensor(leaf.astype(jnp.float32), qmax)
+            qt.append(qi.astype(dtype))
+            scales.append(s)
+        else:
+            qt.append(leaf)
+            scales.append(None)
+    return (jax.tree_util.tree_unflatten(treedef, qt),
+            jax.tree_util.tree_unflatten(
+                treedef, [s if s is not None else jnp.zeros(())
+                          for s in scales]))
+
+
+def dequantize_tree(qtree, scales):
+    """Inverse of :func:`quantize_tree` into bf16 (the serving compute
+    dtype): integer >=2D leaves dequantize by their scale, everything else
+    passes through."""
+    def deq(ql, s):
+        if jnp.issubdtype(ql.dtype, jnp.integer) and ql.ndim >= 2:
+            return ql.astype(jnp.bfloat16) * s.astype(jnp.bfloat16)
+        return ql
+    return jax.tree.map(deq, qtree, scales)
+
+
+def tree_size_report(qtree, bits: int = 8) -> dict[str, Any]:
+    """Weight-byte accounting of a quantized pytree vs its bf16 baseline —
+    the serving analogue of ``ModelArtifact.size_report`` (decode is
+    HBM-bound, so quantized bytes are the roofline term that halves)."""
+    bits = BITS_ALIASES.get(bits, bits)
+    itemsize = bits // 8
+    n_q = n_fp = q_bytes = fp_bytes = 0
+    for leaf in jax.tree_util.tree_leaves(qtree):
+        if jnp.issubdtype(leaf.dtype, jnp.integer) and leaf.ndim >= 2:
+            n_q += int(leaf.size)
+            q_bytes += int(leaf.size) * itemsize
+        else:
+            n_fp += int(leaf.size)
+            fp_bytes += int(leaf.size) * 2          # bf16 passthrough
+    dense = (n_q + n_fp) * 2
+    return {
+        "bits": bits,
+        "quantized_params": n_q,
+        "float_params": n_fp,
+        "weight_bytes_quantized": q_bytes + fp_bytes,
+        "weight_bytes_bf16": dense,
+        "bytes_saved": dense - (q_bytes + fp_bytes),
+        "compression_ratio": dense / max(q_bytes + fp_bytes, 1),
+    }

@@ -19,7 +19,7 @@ import numpy as np
 from . import fastgrnn as fg
 from . import compression as comp
 from . import quantization as q
-from .qruntime import QRuntime, calibrate
+from .qruntime import QRuntime
 
 
 @dataclasses.dataclass
@@ -151,7 +151,7 @@ def accuracy(y_true, y_pred) -> float:
 
 
 # ---------------------------------------------------------------------------
-# Deployment (PTQ + calibration -> QRuntime)
+# Deployment (compression passes -> ModelArtifact -> QRuntime)
 # ---------------------------------------------------------------------------
 
 def deploy(params, calib_windows: np.ndarray, *,
@@ -159,15 +159,22 @@ def deploy(params, calib_windows: np.ndarray, *,
            quantize_activations: bool = False,
            naive_activations: bool = False) -> QRuntime:
     """Quantize weights, run the 5-minibatch calibration pass, return the
-    deterministic integer runtime (the 'deployed' model)."""
-    qp = q.quantize_params(params, quant)
-    rt = QRuntime(qp)
+    deterministic integer runtime (the 'deployed' model).  Built on the
+    ``repro.compress`` pass API; numerically identical to the historical
+    direct ``quantize_params`` + ``calibrate`` handoff."""
+    from repro.compress import (CalibrateActivations, ModelArtifact,
+                                QuantizePTQ)
+    art = QuantizePTQ.from_config(quant).apply(
+        ModelArtifact.from_params(params))
     if naive_activations:
-        return QRuntime(qp, naive_acts=True)
+        return QRuntime.from_artifact(art, naive_acts=True)
     if quantize_activations:
-        scales = calibrate(rt, calib_windows, headroom=quant.headroom)
-        return QRuntime(qp, act_scales=scales)
-    return rt  # deployed config: Q15 weights + FP32 acts through LUT
+        art = CalibrateActivations(
+            windows=np.asarray(calib_windows, np.float32),
+            headroom=quant.headroom, scope="storage").apply(art)
+        return QRuntime.from_artifact(art, quantized_acts=True)
+    # deployed config: Q15 weights + FP32 acts through LUT
+    return QRuntime.from_artifact(art)
 
 
 def agreement(pred_a: np.ndarray, pred_b: np.ndarray) -> float:

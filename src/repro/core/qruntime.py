@@ -73,6 +73,20 @@ class QRuntime:
     act_scales: dict[str, float] | None = None  # calibrated Q15 activations
     naive_acts: bool = False                     # naive Q15 [-1,1) activations
 
+    @classmethod
+    def from_artifact(cls, artifact, *, quantized_acts: bool = False,
+                      naive_acts: bool = False) -> "QRuntime":
+        """Build the runtime from a :class:`repro.compress.ModelArtifact`.
+
+        Defaults to the deployed configuration (FP32 activations through
+        the LUTs); ``quantized_acts=True`` selects the Table V
+        calibrated-Q15-activation counterfactual via the artifact's
+        ``storage_scales`` — see ``ModelArtifact.runtime_scales``, the one
+        gate shared with ``StreamingEngine.from_artifact``."""
+        return cls(artifact.require_qp(),
+                   act_scales=artifact.runtime_scales(quantized_acts),
+                   naive_acts=naive_acts)
+
     def __post_init__(self):
         self.low_rank = "W1" in self.qp.q or "W1" in self.qp.fp
         names = (["W1", "W2", "U1", "U2"] if self.low_rank else ["W", "U"])
@@ -206,8 +220,24 @@ def _record_maxima(rt: QRuntime, xs: np.ndarray, deploy: bool) -> dict[str, floa
     return maxima
 
 
-def _calibrate(rt: QRuntime, windows: np.ndarray, headroom: float,
-               deploy: bool) -> dict[str, float]:
+def record_activations(rt: QRuntime, xs: np.ndarray, *,
+                       deploy: bool = False) -> dict[str, float]:
+    """Collect per-tensor max-abs over one window — THE recorder behind
+    both calibration scopes.  ``deploy=False`` records the activation-
+    storage tensors (Table V); ``deploy=True`` additionally records the
+    export-compiler scales (x, low-rank intermediates, bias-inclusive
+    pre) — see ``_record_maxima``."""
+    return _record_maxima(rt, xs, deploy)
+
+
+def calibrate(rt: QRuntime, windows: np.ndarray, headroom: float = 0.10, *,
+              deploy: bool = False) -> dict[str, float]:
+    """Paper Sec. III-D: max-abs calibration with headroom — the ONE
+    parameterized implementation behind both scopes.  ``deploy=False``
+    yields the Table V activation-storage scales; ``deploy=True`` yields
+    every scale the fixed-point export compiler packs into the weight
+    image (what ``repro.compress.CalibrateActivations`` and
+    ``deploy/image.build_image`` consume)."""
     maxima: dict[str, float] = {}
     for w in windows:
         for k, v in _record_maxima(rt, w, deploy).items():
@@ -216,23 +246,12 @@ def _calibrate(rt: QRuntime, windows: np.ndarray, headroom: float,
             for k, v in maxima.items()}
 
 
-def record_activations(rt: QRuntime, xs: np.ndarray) -> dict[str, float]:
-    """Collect the intermediate tensors the calibration pass needs."""
-    return _record_maxima(rt, xs, deploy=False)
-
-
-def calibrate(rt: QRuntime, windows: np.ndarray, headroom: float = 0.10) -> dict[str, float]:
-    """Paper Sec. III-D: 5-minibatch max-abs calibration with 10% headroom."""
-    return _calibrate(rt, windows, headroom, deploy=False)
-
-
 def record_activations_deploy(rt: QRuntime, xs: np.ndarray) -> dict[str, float]:
-    """Max-abs recorder for the pure-integer deployment path (repro/deploy)."""
-    return _record_maxima(rt, xs, deploy=True)
+    """Thin alias: ``record_activations(rt, xs, deploy=True)``."""
+    return record_activations(rt, xs, deploy=True)
 
 
 def calibrate_deploy(rt: QRuntime, windows: np.ndarray,
                      headroom: float = 0.10) -> dict[str, float]:
-    """Deployment-path calibration: Sec. III-D run with the deploy
-    recorder, yielding every scale the export compiler packs."""
-    return _calibrate(rt, windows, headroom, deploy=True)
+    """Thin alias: ``calibrate(rt, windows, headroom, deploy=True)``."""
+    return calibrate(rt, windows, headroom, deploy=True)

@@ -25,7 +25,8 @@ from .image import (DeployImage, build_image, export_model, size_report,
                     audit_platforms, ACT_KEYS, IMAGE_VERSION)
 from .qvm import QVM, QuantPlan, Requant, quantize_multiplier
 from .emit_c import generate_sources, write_sources, compile_host, CHostModel
-from .goldens import build_reference_model, generate_goldens, save_goldens, load_goldens
+from .goldens import (build_reference_artifact, build_reference_model,
+                      generate_goldens, save_goldens, load_goldens)
 from .verify import run_parity
 
 __all__ = [
@@ -33,6 +34,7 @@ __all__ = [
     "audit_platforms", "ACT_KEYS", "IMAGE_VERSION",
     "QVM", "QuantPlan", "Requant", "quantize_multiplier",
     "generate_sources", "write_sources", "compile_host", "CHostModel",
-    "build_reference_model", "generate_goldens", "save_goldens", "load_goldens",
+    "build_reference_artifact", "build_reference_model", "generate_goldens",
+    "save_goldens", "load_goldens",
     "run_parity",
 ]

@@ -28,9 +28,9 @@ from typing import Any
 
 import numpy as np
 
+from repro.compress import ModelArtifact, default_deploy_pipeline
 from repro.core import fastgrnn as fg
-from repro.core.qruntime import QRuntime, calibrate_deploy
-from repro.core.quantization import QuantConfig, QuantizedParams, quantize_params
+from repro.core.quantization import QuantizedParams
 from repro.data import hapt
 from .image import DeployImage, build_image
 from .qvm import QVM
@@ -42,26 +42,41 @@ N_WINDOWS = 256
 CALIB_WINDOWS = 5
 
 
-def build_reference_model(seed: int = 0, low_rank: bool = True,
-                          params: dict | None = None,
-                          calib: np.ndarray | None = None,
-                          ) -> tuple[QuantizedParams, dict[str, float], DeployImage]:
-    """Deterministic calibrated model -> packed image.
+def build_reference_artifact(seed: int = 0, low_rank: bool = True,
+                             params: dict | None = None,
+                             calib: np.ndarray | None = None,
+                             bits: int = 15) -> ModelArtifact:
+    """Deterministic calibrated model -> compression artifact.
 
     By default: the paper's low-rank H=16 r_w=2 r_u=8 FastGRNN at random
-    init (threefry seed — bit-stable across platforms), Q15 PTQ, and the
-    Sec. III-D 5-window deploy calibration on synthetic HAPT train data.
-    Pass ``params`` (e.g. trained weights) to export a real checkpoint.
+    init (threefry seed — bit-stable across platforms) through the
+    ``default_deploy_pipeline`` (PTQ at ``bits`` -> Sec. III-D 5-window
+    deploy calibration on synthetic HAPT train data -> LUT pack).  The
+    Q15 artifact is bit-identical to the historical direct
+    ``quantize_params`` + ``calibrate_deploy`` handoff.  Pass ``params``
+    (e.g. trained weights) to export a real checkpoint; ``bits=7`` builds
+    the Q7 artifact.
     """
     if params is None:
         cfg = fg.FastGRNNConfig(rank_w=2 if low_rank else None,
                                 rank_u=8 if low_rank else None)
         params = fg.init_params(cfg, __import__("jax").random.PRNGKey(seed))
-    qp = quantize_params(params, QuantConfig())
     if calib is None:
-        calib = hapt.load("train", n=CALIB_WINDOWS).windows
-    act_scales = calibrate_deploy(QRuntime(qp), calib)
-    return qp, act_scales, build_image(qp, act_scales)
+        calib = f"hapt:train:{CALIB_WINDOWS}"
+    pipe = default_deploy_pipeline(bits=bits, calib=calib)
+    return pipe.run(ModelArtifact.from_params(params))
+
+
+def build_reference_model(seed: int = 0, low_rank: bool = True,
+                          params: dict | None = None,
+                          calib: np.ndarray | None = None,
+                          ) -> tuple[QuantizedParams, dict[str, float], DeployImage]:
+    """Legacy-shaped convenience: the reference artifact unpacked into the
+    historical ``(qp, act_scales, image)`` triple (tests and benches that
+    predate the artifact API)."""
+    art = build_reference_artifact(seed=seed, low_rank=low_rank,
+                                   params=params, calib=calib)
+    return art.qp, dict(art.act_scales), build_image(art)
 
 
 def generate_goldens(img: DeployImage, windows: np.ndarray,

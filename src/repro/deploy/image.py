@@ -1,7 +1,8 @@
 """Packed weight image: the deployable artifact (paper Sec. V-B, Table I).
 
-``build_image`` lowers a calibrated ``QuantizedParams`` FastGRNN into a
-:class:`DeployImage`; ``DeployImage.to_bytes`` serializes it into a
+``build_image`` lowers a calibrated :class:`repro.compress.ModelArtifact`
+(or, via a deprecation shim, the legacy ``(QuantizedParams, act_scales)``
+pair) into a :class:`DeployImage`; ``DeployImage.to_bytes`` serializes it into a
 deterministic, versioned byte image mirroring what gets flashed next to the
 paper's ~200-line C translation unit:
 
@@ -29,6 +30,7 @@ from __future__ import annotations
 
 import dataclasses
 import struct
+import warnings
 from typing import Any
 
 import numpy as np
@@ -195,21 +197,47 @@ class DeployImage:
         return int16s * 2 + int32s * 4 + 64
 
 
-def build_image(qp: QuantizedParams, act_scales: dict[str, float]) -> DeployImage:
-    """Lower a calibrated Q15 model into the packed image form.
+def build_image(model, act_scales: dict[str, float] | None = None) -> DeployImage:
+    """Lower a calibrated model into the packed image form.
 
-    ``act_scales`` comes from ``core.qruntime.calibrate_deploy`` and must
-    carry the input/intermediate/pre/h/logits scales the integer engine
-    requantizes through.
+    ``model`` is a :class:`repro.compress.ModelArtifact` carrying
+    quantized params + deploy calibration scales (a ``QuantizePTQ`` pass
+    followed by ``CalibrateActivations(scope="deploy")``).  The legacy
+    ``build_image(qp, act_scales)`` 2-argument form still works for one
+    release (deprecation shim; ``act_scales`` from
+    ``core.qruntime.calibrate_deploy``).
+
+    Q15 (bits=16) reproduces the historical image byte-for-byte.  Q7
+    (bits=8) packs the int8-range weights into the same int16 cell layout
+    with ``bits=8`` in the header, so the qvm / emitted C consume both
+    widths through one quantization plan (scales absorb the width).
     """
-    if qp.bits != 16:
-        raise ValueError("export targets the paper's Q15 path (bits=16)")
+    if act_scales is None or not isinstance(model, QuantizedParams):
+        art = model
+        if getattr(art, "qp", None) is None:
+            raise ValueError("build_image needs a ModelArtifact with "
+                             "quantized params (run QuantizePTQ first)")
+        if act_scales is None:
+            act_scales = art.act_scales
+        qp = art.qp
+    else:
+        warnings.warn(
+            "build_image(qp, act_scales) is deprecated; pass a "
+            "repro.compress.ModelArtifact (QuantizePTQ -> "
+            "CalibrateActivations(scope='deploy'))",
+            DeprecationWarning, stacklevel=2)
+        qp = model
+    if qp.bits not in (16, 8):
+        raise ValueError(f"export supports Q15 (bits=16) and Q7 (bits=8) "
+                         f"weights, got bits={qp.bits}")
     low_rank = "W1" in qp.q
     need = {"x", "pre", "h", "logits"} | ({"wx1", "uh1"} if low_rank else set())
-    missing = need - set(act_scales)
+    missing = need - set(act_scales or {})
     if missing:
         raise ValueError(f"act_scales missing {sorted(missing)} — use "
-                         "core.qruntime.calibrate_deploy, not calibrate")
+                         "core.qruntime.calibrate_deploy (the "
+                         "CalibrateActivations(scope='deploy') pass), "
+                         "not calibrate")
     names = ("W1", "W2", "U1", "U2", "head_w") if low_rank else ("W", "U", "head_w")
     q = {n: np.asarray(qp.q[n], np.int16) for n in names}
     # round every scalar constant to f32 AT BUILD TIME: the serialized
@@ -221,7 +249,7 @@ def build_image(qp: QuantizedParams, act_scales: dict[str, float]) -> DeployImag
     d = q["W2"].shape[0] if low_rank else q["W"].shape[1]
     C = q["head_w"].shape[1]
     return DeployImage(
-        version=IMAGE_VERSION, bits=16, low_rank=low_rank,
+        version=IMAGE_VERSION, bits=qp.bits, low_rank=low_rank,
         d=d, H=H, C=C,
         rank_w=q["W1"].shape[1] if low_rank else 0,
         rank_u=q["U1"].shape[1] if low_rank else 0,
@@ -235,10 +263,12 @@ def build_image(qp: QuantizedParams, act_scales: dict[str, float]) -> DeployImag
         sig_lut_f32=make_lut("sigmoid"), tanh_lut_f32=make_lut("tanh"))
 
 
-def export_model(qp: QuantizedParams, act_scales: dict[str, float],
+def export_model(model, act_scales: dict[str, float] | None = None,
                  path: str | None = None) -> tuple[DeployImage, bytes]:
-    """One-call export: build, serialize, optionally write ``path``."""
-    img = build_image(qp, act_scales)
+    """One-call export: build, serialize, optionally write ``path``.
+    ``model`` is a ModelArtifact (preferred) or the legacy
+    ``(QuantizedParams, act_scales)`` pair."""
+    img = build_image(model, act_scales)
     blob = img.to_bytes()
     if path is not None:
         with open(path, "wb") as f:
@@ -249,6 +279,7 @@ def export_model(qp: QuantizedParams, act_scales: dict[str, float],
 def size_report(img: DeployImage) -> dict[str, Any]:
     return {
         "image_version": img.version,
+        "bits": img.bits,
         "arch": {"d": img.d, "H": img.H, "C": img.C,
                  "rank_w": img.rank_w, "rank_u": img.rank_u,
                  "low_rank": img.low_rank},

@@ -87,12 +87,25 @@ def _engine_run(qp, windows: np.ndarray, n_trace: int):
     return preds, logits, trajs
 
 
-def run_parity(img: DeployImage, qp, windows: np.ndarray, *,
+def run_parity(img, qp=None, windows: np.ndarray | None = None, *,
                n_scalar: int = 32, n_trace: int = 8,
                use_c: bool = True, use_fp32: bool = True) -> dict[str, Any]:
     """Cross-check every execution path over ``windows``; returns the
     agreement report.  Raises nothing — disagreements are reported, and the
-    caller (tests / CI) decides what is fatal."""
+    caller (tests / CI) decides what is fatal.
+
+    ``img`` is either a packed :class:`DeployImage` (with ``qp`` supplied
+    separately) or a :class:`repro.compress.ModelArtifact`, which carries
+    both and is lowered here."""
+    from repro.compress import ModelArtifact
+    provenance = None
+    if isinstance(img, ModelArtifact):
+        from .image import build_image
+        qp, provenance = img.qp, img.provenance
+        img = build_image(img)
+    if qp is None or windows is None:
+        raise TypeError("run_parity needs (artifact, windows=...) or "
+                        "(image, qp, windows)")
     t0 = time.perf_counter()
     n_trace = min(n_trace, len(windows))
     n_scalar = min(n_scalar, len(windows))
@@ -191,6 +204,8 @@ def run_parity(img: DeployImage, qp, windows: np.ndarray, *,
         "timings_s": timings,
         "total_s": round(time.perf_counter() - t0, 3),
     }
+    if provenance is not None:
+        report["provenance"] = provenance
     return report
 
 
@@ -231,14 +246,14 @@ def main() -> None:
                     help="exit 1 unless every quantized path agrees 100%%")
     args = ap.parse_args()
 
-    from .goldens import build_reference_model
+    from .goldens import build_reference_artifact
     if args.trained:
         params, calib = protocol_model(seed=args.seed)
-        qp, _, img = build_reference_model(params=params, calib=calib)
+        art = build_reference_artifact(params=params, calib=calib)
     else:
-        qp, _, img = build_reference_model(seed=args.seed or 0)
+        art = build_reference_artifact(seed=args.seed or 0)
     test = hapt.load("test", n=args.windows)
-    report = run_parity(img, qp, test.windows)
+    report = run_parity(art, windows=test.windows)
     report["model"] = ("trained-protocol" if args.trained else "random-init")
     if args.trained:
         report["protocol_config"] = dict(PROTOCOL)

@@ -130,11 +130,11 @@ def make_decode_step_quantized(cfg: ModelConfig, shape: ShapeConfig | None = Non
     HBM and the convert+scale fuses into the consuming matmuls (the Pallas
     q15_matmul kernel is the explicit-VMEM-tile version of the same
     contract)."""
-    from repro.serve.engine import dequantize_params
+    from repro.compress.tree import dequantize_tree
     window = _window_for(cfg, shape) if shape else None
 
     def decode_step(qparams, scales, cache, tokens):
-        params = dequantize_params(qparams, scales)
+        params = dequantize_tree(qparams, scales)
         return T.decode_step(cfg, params, cache, tokens, window=window,
                              mesh=mesh, splitkv=splitkv)
     return decode_step

@@ -21,8 +21,10 @@ Design notes
 * **Preallocated output**: generated tokens land in a fixed (S, cap) int32
   buffer at a per-slot cursor — decode cost is O(T), not the O(T^2)
   ``np.concatenate``-per-token of the old loop.
-* **Quantized serving**: ``quantize_for_serving`` produces a Q15/Q7 weight
-  pytree + scales via repro.core.quantization.  The backbone runs over
+* **Quantized serving**: ``repro.compress.quantize_tree`` (the pass-API
+  home of the per-tensor PTQ recipe; the old ``quantize_for_serving`` name
+  is a deprecation shim) produces a Q15/Q7 weight pytree + scales.  The
+  backbone runs over
   dequantized weights (decode is HBM-bound; int8 weights halve the
   dominant roofline term on real hardware), and the sampling head — the
   one matmul the engine itself owns — runs the *actual* integer weights
@@ -36,13 +38,14 @@ from __future__ import annotations
 
 import dataclasses
 import itertools
+import warnings
 from typing import Any
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import quantization as q
+from repro.compress.tree import dequantize_tree, quantize_tree
 from repro.models import transformer as T
 from repro.serve.scheduler import HostProgram, SlotScheduler, TickReport
 
@@ -59,35 +62,30 @@ class ServeConfig:
 
 
 def quantize_for_serving(params, bits: int = 8):
-    """Per-tensor symmetric PTQ of every >=2D floating weight leaf;
-    biases/norms/scalars stay fp.  Returns a 2-tuple ``(qtree, scales)``:
-    ``qtree`` mirrors ``params`` with int8/int16 weight leaves, ``scales``
-    mirrors it with the per-tensor dequant scale (a 0-d zero for leaves
-    that were left untouched) — same recipe as the MCU path
-    (core/quantization.py), applied to the LM pytree."""
-    qmax = (1 << (bits - 1)) - 1
-    dtype = jnp.int8 if bits == 8 else jnp.int16
-    flat, treedef = jax.tree_util.tree_flatten_with_path(params)
-    qt, scales = [], []
-    for path, leaf in flat:
-        if leaf.ndim >= 2 and jnp.issubdtype(leaf.dtype, jnp.floating):
-            qi, s = q.quantize_tensor(leaf.astype(jnp.float32), qmax)
-            qt.append(qi.astype(dtype))
-            scales.append(s)
-        else:
-            qt.append(leaf)
-            scales.append(None)
-    return (jax.tree_util.tree_unflatten(treedef, qt),
-            jax.tree_util.tree_unflatten(
-                treedef, [s if s is not None else jnp.zeros(()) for s in scales]))
+    """Deprecated shim — the PTQ math lives in the compression-pass API
+    now (``repro.compress.quantize_tree``); this name remains for one
+    release and returns the same 2-tuple ``(qtree, scales)``.
+
+    Behavior change at non-canonical widths: ``bits`` is now a fixed-point
+    format name — only Q7/int8 (7 or 8) and Q15/int16 (15 or 16) are
+    accepted, and 15 means Q15 (qmax 32767), not a 15-bit qmax.  The old
+    code derived ``qmax = 2^(bits-1) - 1`` for any width; no caller in
+    this repo ever used one outside {8, 16}."""
+    warnings.warn(
+        "serve.engine.quantize_for_serving is deprecated; use "
+        "repro.compress.quantize_tree (bits is a Q-format name there: "
+        "7/8 -> Q7 int8, 15/16 -> Q15 int16)",
+        DeprecationWarning, stacklevel=2)
+    return quantize_tree(params, bits)
 
 
 def dequantize_params(qtree, scales):
-    def deq(ql, s):
-        if jnp.issubdtype(ql.dtype, jnp.integer) and ql.ndim >= 2:
-            return ql.astype(jnp.bfloat16) * s.astype(jnp.bfloat16)
-        return ql
-    return jax.tree.map(deq, qtree, scales)
+    """Deprecated shim — use ``repro.compress.dequantize_tree``."""
+    warnings.warn(
+        "serve.engine.dequantize_params is deprecated; use "
+        "repro.compress.dequantize_tree (same contract)",
+        DeprecationWarning, stacklevel=2)
+    return dequantize_tree(qtree, scales)
 
 
 @dataclasses.dataclass
@@ -114,9 +112,9 @@ class Engine:
         self.cfg = cfg
         self.scfg = scfg = serve_cfg or ServeConfig()
         if scfg.quant_bits:
-            self.qparams, self.scales = quantize_for_serving(
+            self.qparams, self.scales = quantize_tree(
                 params, scfg.quant_bits)
-            self.params = dequantize_params(self.qparams, self.scales)
+            self.params = dequantize_tree(self.qparams, self.scales)
             # quantized head: logits come from the integer weights via the
             # q15_matmul kernel, so decode/prefill return hidden states.
             # The (K, V) integer head matrix is laid out once here (the

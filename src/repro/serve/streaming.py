@@ -56,6 +56,7 @@ from typing import Any, Iterable
 
 import numpy as np
 
+from repro.compress.artifact import ModelArtifact
 from repro.core import quantization as q
 from repro.kernels.fastgrnn_cell.ops import Q15StreamStep
 from repro.serve.scheduler import HostProgram, SlotScheduler, TickReport
@@ -110,7 +111,13 @@ class StreamingEngine:
                  *, quant: q.QuantConfig | None = None,
                  act_scales: dict[str, float] | None = None,
                  naive_acts: bool = False):
-        if isinstance(params_or_qp, q.QuantizedParams):
+        if isinstance(params_or_qp, ModelArtifact):
+            # deployed config: FP32 acts through the LUT.  The artifact's
+            # deploy calibration scales are export-compiler scales, NOT
+            # activation-storage scales; opt into Table V storage quant
+            # explicitly (from_artifact(quantized_acts=True)).
+            self.qp = params_or_qp.require_qp()
+        elif isinstance(params_or_qp, q.QuantizedParams):
             self.qp = params_or_qp
         else:  # float param pytree -> per-tensor Q15 PTQ (Appendix B)
             self.qp = q.quantize_params(params_or_qp, quant or q.QuantConfig())
@@ -140,6 +147,20 @@ class StreamingEngine:
         # telemetry (workload side; placement counters live in the scheduler)
         self._stream_steps = 0
         self._ring_spills = 0
+
+    @classmethod
+    def from_artifact(cls, artifact: ModelArtifact,
+                      config: StreamingConfig | None = None, *,
+                      quantized_acts: bool = False,
+                      naive_acts: bool = False) -> "StreamingEngine":
+        """Build the engine from a compression-pipeline artifact.  The
+        default is the deployed configuration (FP32 acts, bit-identical to
+        ``QRuntime.from_artifact``); ``quantized_acts=True`` selects the
+        Table V calibrated-Q15-activation mode via
+        ``ModelArtifact.runtime_scales`` (the gate shared with QRuntime)."""
+        return cls(artifact, config,
+                   act_scales=artifact.runtime_scales(quantized_acts),
+                   naive_acts=naive_acts)
 
     # ------------------------------------------------------------------
     # Session lifecycle
