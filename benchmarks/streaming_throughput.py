@@ -1,7 +1,13 @@
 """Streaming engine throughput: streams/sec + per-step latency percentiles.
 
     PYTHONPATH=src python -m benchmarks.streaming_throughput \
-        [--out BENCH_streaming.json] [--backends exact,jit] [--windows 2]
+        [--out BENCH_streaming.json] [--backends exact,jit] [--windows 2] \
+        [--shards N]
+
+``--shards N`` (N > 1) drives the identical protocol through the sharded
+``serve/fleet.FleetEngine`` front door — the slot budget splits across N
+per-shard slot schedulers ticked by one fused kernel dispatch; see
+``benchmarks/fleet_bench.py`` for the dedicated scaling/capacity study.
 
 Drives the multi-stream engine at several concurrency levels with every
 slot busy each tick (the steady-state regime: N live 50 Hz sensors), and
@@ -32,18 +38,33 @@ import numpy as np
 from repro.core import fastgrnn as fg
 from repro.core.quantization import quantize_params, QuantConfig
 from repro.data import hapt
+from repro.serve.fleet import FleetConfig, FleetEngine
 from repro.serve.streaming import StreamingEngine, StreamingConfig
 
 FULL = os.environ.get("REPRO_FULL", "0") == "1"
 CONCURRENCY = (256, 1024, 2048, 4096) if FULL else (256, 1024, 2048)
 
 
+def _make_engine(qp, n_streams: int, backend: str, shards: int):
+    """--shards > 1 drives the identical protocol through the sharded
+    fleet front door (serve/fleet) instead of one StreamingEngine — the
+    slot budget is split across per-shard schedulers."""
+    if shards <= 1:
+        return StreamingEngine(
+            qp, StreamingConfig(max_slots=n_streams, backend=backend))
+    per_shard = max(1, n_streams // shards)
+    return FleetEngine(qp, FleetConfig(
+        shards=shards, max_pending_per_shard=0, placement="host",
+        stream=StreamingConfig(max_slots=per_shard, backend=backend)))
+
+
 def bench_backend(backend: str, windows: np.ndarray, n_windows: int,
-                  qp, concurrency=CONCURRENCY) -> list[dict]:
+                  qp, concurrency=CONCURRENCY, shards: int = 1) -> list[dict]:
     rows = []
     for n_streams in concurrency:
-        cfg = StreamingConfig(max_slots=n_streams, backend=backend)
-        eng = StreamingEngine(qp, cfg)
+        eng = _make_engine(qp, n_streams, backend, shards)
+        n_streams = (n_streams if shards <= 1
+                     else shards * max(1, n_streams // shards))
         src = windows[np.arange(n_streams) % len(windows)]
         total = 128 * n_windows
         for i in range(n_streams):
@@ -90,6 +111,9 @@ def main() -> None:
                         help="128-sample windows per stream")
     parser.add_argument("--concurrency", default=None,
                         help="comma-separated stream counts (CI smoke: 64)")
+    parser.add_argument("--shards", type=int, default=1,
+                        help="> 1: drive the same protocol through the "
+                             "sharded FleetEngine (serve/fleet)")
     args = parser.parse_args()
     concurrency = (tuple(int(c) for c in args.concurrency.split(","))
                    if args.concurrency else CONCURRENCY)
@@ -102,13 +126,14 @@ def main() -> None:
     rows = []
     for backend in args.backends.split(","):
         rows += bench_backend(backend.strip(), windows, args.windows, qp,
-                              concurrency)
+                              concurrency, shards=args.shards)
 
     record = {
         "benchmark": "streaming_throughput",
         "model": "FastGRNN H=16 r_w=2 r_u=8, Q15 PTQ (566-byte class)",
         "sample_rate_hz": 50.0,
         "window": 128,
+        "shards": args.shards,
         "host": {"platform": platform.platform(),
                  "jax": jax.__version__,
                  "device": str(jax.devices()[0])},

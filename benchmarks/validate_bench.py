@@ -35,6 +35,22 @@ SCHEMAS: dict[str, dict] = {
         "top": ["benchmark", "model", "host", "image", "budgets", "qvm",
                 "c_host", "parity", "mcu_cycle_model"],
     },
+    # benchmarks/fleet_bench.py: shard-count scaling sweep + the 100k+
+    # concurrent-stream capacity point.  `capacity` pins the headline
+    # claims (concurrent_streams, realtime_streams_50hz) so the artifact
+    # cannot silently drop them.
+    "fleet_sharding": {
+        "top": ["benchmark", "model", "backend", "placement",
+                "slots_per_shard", "window", "sample_rate_hz", "host",
+                "results", "scaling_1_to_max_x", "capacity"],
+        "row": ["shards", "concurrent_streams", "ticks",
+                "stream_steps_per_sec", "p50_ms", "p99_ms",
+                "realtime_streams_50hz", "scaling_x",
+                "scaling_efficiency", "scheduler"],
+        "capacity": ["shards", "slots_per_shard", "concurrent_streams",
+                     "stream_steps_per_sec", "realtime_streams_50hz",
+                     "sustained_realtime_50hz"],
+    },
     # `python -m repro.compress --report`: one compression-pipeline run.
     # `size` is ModelArtifact.size_report() — per-tensor dense vs
     # CSR-packed bytes at the artifact's true weight width (Q15/Q7).
@@ -77,14 +93,16 @@ def validate(path: str) -> tuple[str | None, list[str]]:
     for key in schema["top"]:
         if key not in record:
             errors.append(f"{path}: missing top-level key {key!r}")
-    if "size" in schema:
-        size = record.get("size")
-        if not isinstance(size, dict):
-            errors.append(f"{path}: 'size' must be a size-report object")
+    for sub in ("size", "capacity"):
+        if sub not in schema:
+            continue
+        block = record.get(sub)
+        if not isinstance(block, dict):
+            errors.append(f"{path}: {sub!r} must be an object")
         else:
-            for key in schema["size"]:
-                if key not in size:
-                    errors.append(f"{path}: size missing key {key!r}")
+            for key in schema[sub]:
+                if key not in block:
+                    errors.append(f"{path}: {sub} missing key {key!r}")
     rows = record.get("results")
     if "row" in schema:
         if not isinstance(rows, list) or not rows:

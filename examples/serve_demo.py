@@ -1,13 +1,21 @@
 """Serving demo: batched prefill + decode with the L-S-Q quantized path.
 
     PYTHONPATH=src python examples/serve_demo.py --arch mamba2-780m
+    PYTHONPATH=src python examples/serve_demo.py --shards 4
 
-Runs a reduced model through the serving engine twice — bf16 weights and
-int8 (Q7) per-tensor quantized weights (the paper's Q stage at LM scale,
-via the same ``repro.compress.quantize_tree`` pass the engine uses
-internally) — and reports tokens generated, agreement between the two
-paths, the per-tree weight-byte saving, and the analytic HBM-byte saving
-for the full config.
+Default mode runs a reduced LM through the serving engine twice — bf16
+weights and int8 (Q7) per-tensor quantized weights (the paper's Q stage
+at LM scale, via the same ``repro.compress.quantize_tree`` pass the
+engine uses internally) — and reports tokens generated, agreement between
+the two paths, the per-tree weight-byte saving, and the analytic HBM-byte
+saving for the full config.
+
+``--shards N`` (N > 1) instead drives the *sensor-fleet* serving path:
+the same entry point stands up a sharded ``serve/fleet.FleetEngine``
+(N per-shard slot schedulers, rendezvous routing, one fused Q15 kernel
+dispatch per tick), classifies a batch of HAPT windows through it with a
+forced mid-stream migration, and checks the fleet's predictions
+bit-identically against the scalar QRuntime reference.
 """
 import argparse
 
@@ -23,7 +31,57 @@ parser = argparse.ArgumentParser()
 parser.add_argument("--arch", default="deepseek-7b", choices=list(C.ARCHS))
 parser.add_argument("--batch", type=int, default=4)
 parser.add_argument("--new-tokens", type=int, default=24)
+parser.add_argument("--shards", type=int, default=1,
+                    help="> 1: demo the sharded Q15 sensor-fleet path "
+                         "(serve/fleet) instead of the LM engine")
 args = parser.parse_args()
+
+
+def fleet_demo(n_shards: int) -> None:
+    from repro.core import fastgrnn as fg
+    from repro.core.qruntime import QRuntime
+    from repro.core.quantization import quantize_params, QuantConfig
+    from repro.data import hapt
+    from repro.serve.fleet import FleetConfig, FleetEngine
+    from repro.serve.streaming import StreamingConfig
+
+    qp = quantize_params(
+        fg.init_params(fg.FastGRNNConfig(rank_w=2, rank_u=8),
+                       jax.random.PRNGKey(0)), QuantConfig())
+    windows = hapt.load("test", n=96).windows
+    fleet = FleetEngine(qp, FleetConfig(
+        shards=n_shards, stream=StreamingConfig(max_slots=16)))
+    for i, w in enumerate(windows):
+        fleet.attach(f"sensor-{i}", w, total_steps=len(w))
+    for _ in range(40):                      # advance mid-window...
+        fleet.step()
+    moved = fleet.migrate("sensor-0")        # ...then live-migrate one
+    dst = fleet.shard_of("sensor-0")
+    events = fleet.drain()
+    preds = {}
+    for e in events:
+        for ev in (e.events() if hasattr(e, "events") else [e]):
+            preds[ev.stream_id] = ev.prediction
+    ref = QRuntime(qp).predict_batch(windows)
+    agree = float(np.mean([preds[f"sensor-{i}"] == ref[i]
+                           for i in range(len(windows))]))
+    st = fleet.stats()
+    print(f"fleet: {st['shards']} shards x "
+          f"{st['per_shard'][0]['max_slots']} slots, "
+          f"{st['completed']} streams classified, "
+          f"{st['migrations']} live migration(s) "
+          f"(sensor-0 re-attached {moved!r} on shard {dst})")
+    print(f"scheduler roll-up: {st['scheduler']['admissions']} admissions, "
+          f"{st['scheduler']['spills']} spills, "
+          f"{st['scheduler']['evictions']} evictions across "
+          f"{st['shards']} per-shard schedulers")
+    print(f"bit-exactness vs scalar QRuntime: {agree * 100:.1f}% "
+          f"({'OK' if agree == 1.0 else 'MISMATCH'})")
+
+
+if args.shards > 1:
+    fleet_demo(args.shards)
+    raise SystemExit(0)
 
 full = C.get(args.arch)
 if not full.has_decode:

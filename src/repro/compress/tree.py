@@ -6,8 +6,8 @@ Same per-tensor symmetric recipe as the MCU path
 parameter pytree: every floating leaf with ``ndim >= 2`` is quantized to
 int8 (Q7) or int16 (Q15); biases, norms and scalars pass through in float.
 ``serve/engine.Engine`` consumes these directly; the old
-``quantize_for_serving`` / ``dequantize_params`` names remain as
-deprecation shims for one release.
+``quantize_for_serving`` / ``dequantize_params`` shim names served their
+one deprecation release and are gone.
 """
 from __future__ import annotations
 

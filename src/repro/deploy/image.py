@@ -30,7 +30,6 @@ from __future__ import annotations
 
 import dataclasses
 import struct
-import warnings
 from typing import Any
 
 import numpy as np
@@ -197,36 +196,32 @@ class DeployImage:
         return int16s * 2 + int32s * 4 + 64
 
 
-def build_image(model, act_scales: dict[str, float] | None = None) -> DeployImage:
+def build_image(artifact) -> DeployImage:
     """Lower a calibrated model into the packed image form.
 
-    ``model`` is a :class:`repro.compress.ModelArtifact` carrying
+    ``artifact`` is a :class:`repro.compress.ModelArtifact` carrying
     quantized params + deploy calibration scales (a ``QuantizePTQ`` pass
     followed by ``CalibrateActivations(scope="deploy")``).  The legacy
-    ``build_image(qp, act_scales)`` 2-argument form still works for one
-    release (deprecation shim; ``act_scales`` from
-    ``core.qruntime.calibrate_deploy``).
+    ``build_image(qp, act_scales)`` 2-argument form was a one-release
+    deprecation shim and is gone; wrap the pair as
+    ``ModelArtifact(qp=qp, act_scales=act_scales)`` instead.
 
     Q15 (bits=16) reproduces the historical image byte-for-byte.  Q7
     (bits=8) packs the int8-range weights into the same int16 cell layout
     with ``bits=8`` in the header, so the qvm / emitted C consume both
     widths through one quantization plan (scales absorb the width).
     """
-    if act_scales is None or not isinstance(model, QuantizedParams):
-        art = model
-        if getattr(art, "qp", None) is None:
-            raise ValueError("build_image needs a ModelArtifact with "
-                             "quantized params (run QuantizePTQ first)")
-        if act_scales is None:
-            act_scales = art.act_scales
-        qp = art.qp
-    else:
-        warnings.warn(
-            "build_image(qp, act_scales) is deprecated; pass a "
+    if isinstance(artifact, QuantizedParams):
+        raise TypeError(
+            "build_image(qp, act_scales) was removed; pass a "
             "repro.compress.ModelArtifact (QuantizePTQ -> "
-            "CalibrateActivations(scope='deploy'))",
-            DeprecationWarning, stacklevel=2)
-        qp = model
+            "CalibrateActivations(scope='deploy')), or wrap the pair as "
+            "ModelArtifact(qp=qp, act_scales=act_scales)")
+    if getattr(artifact, "qp", None) is None:
+        raise ValueError("build_image needs a ModelArtifact with "
+                         "quantized params (run QuantizePTQ first)")
+    act_scales = artifact.act_scales
+    qp = artifact.qp
     if qp.bits not in (16, 8):
         raise ValueError(f"export supports Q15 (bits=16) and Q7 (bits=8) "
                          f"weights, got bits={qp.bits}")
@@ -263,12 +258,11 @@ def build_image(model, act_scales: dict[str, float] | None = None) -> DeployImag
         sig_lut_f32=make_lut("sigmoid"), tanh_lut_f32=make_lut("tanh"))
 
 
-def export_model(model, act_scales: dict[str, float] | None = None,
+def export_model(artifact,
                  path: str | None = None) -> tuple[DeployImage, bytes]:
     """One-call export: build, serialize, optionally write ``path``.
-    ``model`` is a ModelArtifact (preferred) or the legacy
-    ``(QuantizedParams, act_scales)`` pair."""
-    img = build_image(model, act_scales)
+    ``artifact`` is a calibrated :class:`repro.compress.ModelArtifact`."""
+    img = build_image(artifact)
     blob = img.to_bytes()
     if path is not None:
         with open(path, "wb") as f:

@@ -91,7 +91,8 @@ class Q15StreamStep:
     BACKENDS = ("exact", "jit", "pallas")
 
     def __init__(self, qp_or_sw, *, act_scales=None, naive_acts=False,
-                 backend: str = "exact", interpret: bool = True):
+                 backend: str = "exact", interpret: bool = True,
+                 device=None):
         if backend not in self.BACKENDS:
             raise ValueError(f"backend must be one of {self.BACKENDS}")
         if isinstance(qp_or_sw, qstep.StepWeights):
@@ -101,11 +102,19 @@ class Q15StreamStep:
                 qp_or_sw, act_scales=act_scales, naive_acts=naive_acts)
         self.backend = backend
         self.interpret = interpret
+        # ``device``: pin the jit/pallas dispatch (weight constants AND the
+        # per-tick inputs) to one jax device — the fleet's per-shard
+        # placement hook.  None = default device; the exact backend is
+        # process-local NumPy and ignores it.
+        self.device = device if backend != "exact" else None
         self._np_arrs = self.sw.arrays(np)
         if backend == "exact":
             self._step = self._step_exact
         elif backend == "jit":
             self._jnp_arrs = self.sw.arrays(jnp)
+            if self.device is not None:
+                self._jnp_arrs = {k: jax.device_put(v, self.device)
+                                  for k, v in self._jnp_arrs.items()}
             self._step = self._build_jit()
         else:
             from .kernel import make_fastgrnn_step
@@ -164,12 +173,14 @@ class Q15StreamStep:
         longer pay for the whole slot table).  The jit/pallas backends keep
         the fixed-shape masked step: a varying row count would retrace /
         repad every tick, costing more than the skipped rows save."""
-        if rows is None:
-            rows = np.nonzero(active)[0]
         if self.backend != "exact":
+            # the masked full-batch step never needs the row list — skip
+            # the nonzero scan entirely (it is measurable at 100k+ slots)
             return self._step(np.asarray(h, np.float32),
                               np.asarray(x, np.float32),
                               np.asarray(active, bool))
+        if rows is None:
+            rows = np.nonzero(active)[0]
         if rows.size == 0:
             return np.asarray(h, np.float32)
         h = np.asarray(h, np.float32).copy()
@@ -178,14 +189,20 @@ class Q15StreamStep:
         return h
 
     def _build_jit(self):
-        arrs, sw = self._jnp_arrs, self.sw
+        arrs, sw, dev = self._jnp_arrs, self.sw, self.device
 
         @jax.jit
         def f(h, x, active):
             h_new = qstep.step_batched(jnp, arrs, sw, h, x)
             return jnp.where(active[:, None], h_new, h)
 
-        return lambda h, x, active: np.asarray(f(h, x, active))
+        if dev is None:
+            return lambda h, x, active: np.asarray(f(h, x, active))
+        # committed inputs steer the compiled computation onto the shard's
+        # device (the closure constants above are already resident there)
+        return lambda h, x, active: np.asarray(
+            f(jax.device_put(h, dev), jax.device_put(x, dev),
+              jax.device_put(active, dev)))
 
     def _step_pallas(self, h, x, active):
         S, H = h.shape
@@ -196,6 +213,11 @@ class Q15StreamStep:
         x_p[:S, :x.shape[1]] = x
         m_p = np.zeros((S + sp,), np.int32)
         m_p[:S] = active
-        h_new = self._pallas_step(jnp.asarray(x_p), jnp.asarray(h_p),
-                                  jnp.asarray(m_p))
+        if self.device is not None:
+            args = (jax.device_put(x_p, self.device),
+                    jax.device_put(h_p, self.device),
+                    jax.device_put(m_p, self.device))
+        else:
+            args = (jnp.asarray(x_p), jnp.asarray(h_p), jnp.asarray(m_p))
+        h_new = self._pallas_step(*args)
         return np.asarray(h_new)[:S, :H]

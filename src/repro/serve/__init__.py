@@ -1,1 +1,1 @@
-from . import engine, scheduler, streaming  # noqa: F401
+from . import engine, fleet, scheduler, streaming  # noqa: F401

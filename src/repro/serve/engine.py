@@ -22,8 +22,8 @@ Design notes
   buffer at a per-slot cursor — decode cost is O(T), not the O(T^2)
   ``np.concatenate``-per-token of the old loop.
 * **Quantized serving**: ``repro.compress.quantize_tree`` (the pass-API
-  home of the per-tensor PTQ recipe; the old ``quantize_for_serving`` name
-  is a deprecation shim) produces a Q15/Q7 weight pytree + scales.  The
+  home of the per-tensor PTQ recipe) produces a Q15/Q7 weight pytree +
+  scales.  The
   backbone runs over
   dequantized weights (decode is HBM-bound; int8 weights halve the
   dominant roofline term on real hardware), and the sampling head — the
@@ -38,7 +38,6 @@ from __future__ import annotations
 
 import dataclasses
 import itertools
-import warnings
 from typing import Any
 
 import jax
@@ -59,33 +58,6 @@ class ServeConfig:
     quant_bits: int = 0             # 0 off, 8, 16
     seed: int = 0
     admit_policy: str = "any_free"  # "all_free" = window-boundary baseline
-
-
-def quantize_for_serving(params, bits: int = 8):
-    """Deprecated shim — the PTQ math lives in the compression-pass API
-    now (``repro.compress.quantize_tree``); this name remains for one
-    release and returns the same 2-tuple ``(qtree, scales)``.
-
-    Behavior change at non-canonical widths: ``bits`` is now a fixed-point
-    format name — only Q7/int8 (7 or 8) and Q15/int16 (15 or 16) are
-    accepted, and 15 means Q15 (qmax 32767), not a 15-bit qmax.  The old
-    code derived ``qmax = 2^(bits-1) - 1`` for any width; no caller in
-    this repo ever used one outside {8, 16}."""
-    warnings.warn(
-        "serve.engine.quantize_for_serving is deprecated; use "
-        "repro.compress.quantize_tree (bits is a Q-format name there: "
-        "7/8 -> Q7 int8, 15/16 -> Q15 int16)",
-        DeprecationWarning, stacklevel=2)
-    return quantize_tree(params, bits)
-
-
-def dequantize_params(qtree, scales):
-    """Deprecated shim — use ``repro.compress.dequantize_tree``."""
-    warnings.warn(
-        "serve.engine.dequantize_params is deprecated; use "
-        "repro.compress.dequantize_tree (same contract)",
-        DeprecationWarning, stacklevel=2)
-    return dequantize_tree(qtree, scales)
 
 
 @dataclasses.dataclass

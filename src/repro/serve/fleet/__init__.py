@@ -1,0 +1,12 @@
+"""Sharded fleet-serving subsystem: route 100k+ concurrent Q15 sensor
+streams across per-shard slot schedulers behind one FleetEngine front
+door.  See ``docs/fleet.md`` for routing, migration, drain semantics and
+measured scaling."""
+from .engine import FleetConfig, FleetEngine, classify_windows_fleet
+from .placement import shard_devices
+from .routing import hrw_weight, rank_shards, route
+
+__all__ = [
+    "FleetConfig", "FleetEngine", "classify_windows_fleet",
+    "shard_devices", "hrw_weight", "rank_shards", "route",
+]

@@ -1,0 +1,575 @@
+"""FleetEngine: one front door over N independent StreamingEngine shards.
+
+The paper deploys one FastGRNN per device at 50 Hz; the cloud-side
+complement is a process that serves *fleets* of such sensors — more
+concurrent streams than one slot table should hold.  This module shards
+the slot axis: N :class:`~repro.serve.streaming.StreamingEngine` shards,
+each with its own :class:`~repro.serve.scheduler.SlotScheduler` (slot
+table, pending FIFO, counters), composed behind one engine-shaped API.
+
+Design
+------
+* **Routing** — deterministic rendezvous (HRW) hashing
+  (``fleet/routing.py``): a stream's home shard is a pure function of its
+  id and the eligible-shard set, stable across processes and under shard
+  drain (removing a shard remaps only that shard's streams).
+* **Admission** — shard-local: the home shard's scheduler places or
+  queues the stream.  With ``max_pending_per_shard`` set, a saturated
+  shard overflows into the fleet-level FIFO *spillover queue*; every tick
+  drains it into the home shard when room frees, or the least-loaded
+  eligible shard (deterministic tie-break) when the home stays hot.
+* **Migration** — live and bit-exact: ``migrate()`` snapshots a stream
+  off its shard (:meth:`StreamingEngine.export_stream` — hidden state,
+  counters, unconsumed samples, trajectory tap) and re-attaches it on the
+  destination (:meth:`~StreamingEngine.import_stream`).  Under the exact
+  backend the continued trajectory is bit-identical to never having
+  moved; ``decommission()`` uses this to drain a shard onto each
+  stream's next-best rendezvous shard.
+* **Fused ticks** — "batch across shards in one tick": shards run
+  admission and sample-gather independently (`SlotScheduler.tick_begin` +
+  `StreamingEngine._advance_begin`), then the fleet concatenates every
+  co-located shard's (h, x, active) and makes ONE batched
+  ``Q15StreamStep`` dispatch per device group, then each shard finishes
+  its own bookkeeping.  The per-row math is row-independent, so fusion
+  preserves the bit-exactness contract while amortizing per-dispatch
+  overhead across shards — the measured source of near-linear shard
+  scaling on CPU (``benchmarks/fleet_bench.py``).
+* **Placement** — shards are assigned distinct jax devices when the
+  process has them (``fleet/placement.py``; CPU runners fake them via
+  ``--xla_force_host_platform_device_count``) and fall back to
+  process-local NumPy shards otherwise.  The exact backend is always the
+  NumPy fallback — that is the bit-identity contract surface.
+* **Counters compose** — ``stats()`` sums every scheduler/workload
+  counter across shards (admissions, recycles, spills, occupancy,
+  evictions, …) and preserves the per-shard breakdown, plus fleet-level
+  counters (``global_spills``, ``migrations``, fleet ticks).
+
+Every stream remains **bit-identical** to the single-engine
+``StreamingEngine`` reference regardless of shard count, routing, or
+mid-stream migration (exact backend; asserted in ``tests/test_fleet.py``).
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+from typing import Any, Iterable
+
+import numpy as np
+
+from repro.core import quantization as q
+from repro.kernels.fastgrnn_cell.ops import Q15StreamStep
+from repro.serve.scheduler import TickReport
+from repro.serve.streaming import (StreamEvent, StreamState, StreamingConfig,
+                                   StreamingEngine, coerce_qp,
+                                   coerce_samples)
+from . import placement, routing
+
+
+@dataclasses.dataclass(frozen=True)
+class FleetConfig:
+    """Fleet shape.  ``stream`` is the per-shard template —
+    ``stream.max_slots`` is the *per-shard* resident width, so fleet
+    capacity is ``shards * stream.max_slots`` resident streams."""
+    shards: int = 4
+    stream: StreamingConfig = dataclasses.field(
+        default_factory=StreamingConfig)
+    max_pending_per_shard: int | None = None  # None = shard FIFOs unbounded
+    # (nothing ever reaches the fleet spillover queue)
+    placement: str = "auto"      # "auto" | "devices" | "host"
+    fuse_ticks: bool = True      # one kernel dispatch per device group/tick
+
+
+@dataclasses.dataclass
+class _SpillEntry:
+    """A stream waiting in the fleet-level spillover queue (every shard it
+    may route to is saturated).  Buffers samples until placement."""
+    chunks: list
+    total: int | None
+    record_trajectory: bool
+
+
+class FleetEngine:
+    """Sharded multi-stream serving: StreamingEngine semantics at fleet
+    scale.  The public surface mirrors :class:`StreamingEngine`
+    (``attach / feed / step / drain / detach / trajectory / stats``) plus
+    the fleet verbs (``migrate / decommission / recommission /
+    shard_of``), so existing drivers — ``classify_windows``, the
+    streaming benchmark — run unchanged against a fleet."""
+
+    def __init__(self, params_or_qp, config: FleetConfig | None = None,
+                 *, quant: q.QuantConfig | None = None,
+                 act_scales: dict[str, float] | None = None,
+                 naive_acts: bool = False):
+        config = config or FleetConfig()
+        if config.shards < 1:
+            raise ValueError("shards must be >= 1")
+        self.config = config
+        self.qp = coerce_qp(params_or_qp, quant)
+        devices = placement.shard_devices(
+            config.shards, config.placement, config.stream.backend)
+        self.shard_keys = [f"shard-{i}" for i in range(config.shards)]
+        self.shards = [
+            StreamingEngine(
+                self.qp,
+                dataclasses.replace(config.stream, device=devices[i]),
+                act_scales=act_scales, naive_acts=naive_acts)
+            for i in range(config.shards)]
+        self._routable = [True] * config.shards
+        # device groups for fused dispatch: co-located shards batch into
+        # one kernel call per tick (keyed by device identity; None = the
+        # process-local / default-device group)
+        groups: dict[Any, list[int]] = {}
+        for i, dev in enumerate(devices):
+            groups.setdefault(dev, []).append(i)
+        self._groups = groups
+        self._group_kernels = {
+            dev: Q15StreamStep(self.qp, act_scales=act_scales,
+                               naive_acts=naive_acts,
+                               backend=config.stream.backend,
+                               interpret=config.stream.interpret,
+                               device=dev)
+            for dev in groups}
+        self._devices = devices
+        self._owner: dict[str, int] = {}   # stream -> shard (incl. pending)
+        self._spilled: "collections.OrderedDict[str, _SpillEntry]" = \
+            collections.OrderedDict()      # fleet-level FIFO spillover
+        self._ticks = 0
+        self._global_spills = 0
+        self._migrations = 0
+        # --- fused-tick fast path (single device group) ----------------
+        # One (sum S_i, ...) buffer per kernel operand, with each shard's
+        # segment handed out as a view: shards write their gathered
+        # samples straight into the fused x operand (zero concat), and the
+        # fused step's output h is adopted back as next tick's input when
+        # no shard rebound its hidden state in between (steady state:
+        # zero copies besides the kernel's own output).
+        widths = [s.config.max_slots for s in self.shards]
+        self._offsets = np.concatenate([[0], np.cumsum(widths)])
+        self._h_big: np.ndarray | None = None
+        self._h_views: list = [None] * config.shards
+        if config.fuse_ticks and len(groups) == 1:
+            d = self.shards[0].kernel.input_dim
+            total = int(self._offsets[-1])
+            self._x_big = np.zeros((total, d), np.float32)
+            self._av_big = np.zeros(total, bool)
+            for i, sh in enumerate(self.shards):
+                sh._x = self._x_big[self._offsets[i]:self._offsets[i + 1]]
+        else:
+            self._x_big = None
+            self._av_big = None
+
+    @classmethod
+    def from_artifact(cls, artifact, config: FleetConfig | None = None, *,
+                      quantized_acts: bool = False,
+                      naive_acts: bool = False) -> "FleetEngine":
+        """Build the fleet from a compression-pipeline artifact — the same
+        contract as :meth:`StreamingEngine.from_artifact`."""
+        return cls(artifact, config,
+                   act_scales=artifact.runtime_scales(quantized_acts),
+                   naive_acts=naive_acts)
+
+    # ------------------------------------------------------------------
+    # Session lifecycle (StreamingEngine-shaped)
+    # ------------------------------------------------------------------
+    def attach(self, stream_id: str, samples: np.ndarray | None = None, *,
+               total_steps: int | None = None,
+               record_trajectory: bool = False) -> str:
+        """Register a stream on its rendezvous home shard.  Returns
+        ``"active"`` / ``"pending"`` (shard-local placement) or
+        ``"spilled"`` when every admissible shard is saturated and the
+        stream joined the fleet-level spillover queue."""
+        self._reclaim(stream_id)
+        if stream_id in self._owner or stream_id in self._spilled:
+            raise ValueError(f"stream {stream_id!r} already attached")
+        dst = self._pick_shard(stream_id)
+        if dst is None:
+            entry = _SpillEntry(chunks=[], total=total_steps,
+                                record_trajectory=record_trajectory)
+            if samples is not None:
+                entry.chunks.append(self._check_samples(stream_id, samples))
+            self._spilled[stream_id] = entry
+            self._global_spills += 1
+            return "spilled"
+        status = self.shards[dst].attach(
+            stream_id, samples, total_steps=total_steps,
+            record_trajectory=record_trajectory)
+        self._owner[stream_id] = dst
+        return status
+
+    def feed(self, stream_id: str, samples: np.ndarray) -> None:
+        """Append samples to a stream, wherever it lives (shard-resident,
+        shard-pending, or fleet-spilled)."""
+        shard = self._owner.get(stream_id)
+        if shard is not None and stream_id in self.shards[shard]._sessions:
+            self.shards[shard].feed(stream_id, samples)
+            return
+        if stream_id in self._spilled:
+            self._spilled[stream_id].chunks.append(
+                self._check_samples(stream_id, samples))
+            return
+        raise KeyError(f"stream {stream_id!r} is not attached")
+
+    def detach(self, stream_id: str) -> StreamEvent | None:
+        """Terminate a stream (partial-window final event if it consumed
+        samples since its last emission, exactly like the single engine)."""
+        shard = self._owner.get(stream_id)
+        if shard is not None and stream_id in self.shards[shard]._sessions:
+            ev = self.shards[shard].detach(stream_id)
+            del self._owner[stream_id]
+            return ev
+        if stream_id in self._spilled:
+            del self._spilled[stream_id]
+            return None
+        self._owner.pop(stream_id, None)      # already finished: stale owner
+        raise KeyError(f"stream {stream_id!r} is not attached")
+
+    def trajectory(self, stream_id: str) -> np.ndarray:
+        """(steps, H) hidden trajectory of a tapped stream — served by the
+        shard that currently (or last) held it; migration carries the
+        recorded prefix along, so the result spans shard moves."""
+        shard = self._owner.get(stream_id)
+        if shard is not None:
+            return self.shards[shard].trajectory(stream_id)
+        raise KeyError(f"stream {stream_id!r} was not tapped")
+
+    # ------------------------------------------------------------------
+    # Ticking
+    # ------------------------------------------------------------------
+    def step(self) -> list[StreamEvent]:
+        """One fleet tick: drain the spillover queue into shards with
+        room, then advance every shard — fused (one kernel dispatch per
+        device group) or independently per shard.  Events are returned in
+        shard order; per-stream ordering matches the single engine."""
+        self._flush_spill()
+        self._ticks += 1
+        live = self.n_active + self.n_pending
+        if len(self._owner) > 2 * live + 1024:
+            self._compact_owners()       # bound stale finished-id entries
+        if not self.config.fuse_ticks:
+            events: list[StreamEvent] = []
+            for shard in self.shards:
+                events.extend(shard.step())
+            return events
+        return self._step_fused()
+
+    def _step_fused(self) -> list[StreamEvent]:
+        # phase 1: every shard runs admission + ring gather (no kernel)
+        begun: list[tuple] = []
+        for shard in self.shards:
+            resident = shard._sched.tick_begin()
+            handle = (shard._advance_begin(resident)
+                      if resident is not None else None)
+            begun.append((resident, handle))
+        # phase 2: one batched kernel dispatch per device group
+        h_out: dict[int, np.ndarray] = {}
+        if self._x_big is not None:
+            self._dispatch_single_group(begun, h_out)
+        else:
+            self._dispatch_groups(begun, h_out)
+        # phase 3: per-shard bookkeeping + scheduler release accounting
+        events: list[StreamEvent] = []
+        for i, (resident, handle) in enumerate(begun):
+            if resident is None:
+                continue
+            shard = self.shards[i]
+            report = (shard._advance_finish(handle, h_out[i])
+                      if handle is not None else TickReport())
+            events.extend(shard._sched.tick_finish(report))
+        return events
+
+    def _dispatch_single_group(self, begun: list, h_out: dict) -> None:
+        """Fused dispatch, zero-copy variant: every shard's ``_x`` is a
+        view of one (sum S_i, d) operand, the active mask is assembled in
+        a preallocated buffer, and last tick's fused output is adopted as
+        this tick's h operand when every shard still holds its view of it
+        (a shard rebinding ``_h`` — window reset, admission — falls back
+        to one concatenate)."""
+        n = len(self.shards)
+        live = [i for i in range(n) if begun[i][1] is not None]
+        if not live:
+            return
+        kern = next(iter(self._group_kernels.values()))
+        off = self._offsets
+        if len(live) == 1:
+            i = live[0]
+            sh, (avail, rows) = self.shards[i], begun[i][1]
+            h_out[i] = kern.step_rows(sh._h, sh._x, avail, rows)
+            self._h_big = None
+            return
+        av = self._av_big
+        if len(live) < n:
+            av[:] = False
+        for i in live:
+            av[off[i]:off[i + 1]] = begun[i][1][0]
+        if (self._h_big is not None and
+                all(self.shards[i]._h is self._h_views[i] for i in range(n))):
+            h_cat = self._h_big              # steady state: no copy at all
+        else:
+            h_cat = np.concatenate([sh._h for sh in self.shards])
+        h_new = kern.step_rows(h_cat, self._x_big, av, None)
+        self._h_big = h_new
+        for i in range(n):
+            view = h_new[off[i]:off[i + 1]]
+            self._h_views[i] = view
+            if i in live:
+                h_out[i] = view
+
+    def _dispatch_groups(self, begun: list, h_out: dict) -> None:
+        """Fused dispatch, one batched kernel call per device group
+        (shards placed on distinct jax devices)."""
+        for dev, idxs in self._groups.items():
+            live = [i for i in idxs if begun[i][1] is not None]
+            if not live:
+                continue
+            kern = self._group_kernels[dev]
+            if len(live) == 1:
+                i = live[0]
+                sh, (avail, rows) = self.shards[i], begun[i][1]
+                h_out[i] = kern.step_rows(sh._h, sh._x, avail, rows)
+                continue
+            h_cat = np.concatenate([self.shards[i]._h for i in live])
+            x_cat = np.concatenate([self.shards[i]._x for i in live])
+            av_cat = np.concatenate([begun[i][1][0] for i in live])
+            h_new = kern.step_rows(h_cat, x_cat, av_cat, None)
+            offset = 0
+            for i in live:
+                S = self.shards[i].config.max_slots
+                h_out[i] = h_new[offset:offset + S]
+                offset += S
+
+    def drain(self) -> list[StreamEvent]:
+        """Tick until no stream anywhere in the fleet can advance.  Open
+        streams stay attached, exactly like the single engine."""
+        events: list[StreamEvent] = []
+        while self._any_buffered():
+            before = self._stream_steps()
+            out = self.step()
+            events.extend(out)
+            if not out and self._stream_steps() == before:
+                break    # only unplaceable/pending streams hold samples
+        return events
+
+    # ------------------------------------------------------------------
+    # Fleet verbs: migration, drain, decommission
+    # ------------------------------------------------------------------
+    def migrate(self, stream_id: str, dst: int | None = None) -> str:
+        """Move a live stream to shard ``dst`` (default: its next-best
+        rendezvous shard), bit-exactly: hidden state, counters, buffered
+        samples and trajectory tap travel with it.  Returns the
+        destination admission status (``"active"``/``"pending"``)."""
+        src = self._owner.get(stream_id)
+        if src is None or stream_id not in self.shards[src]._sessions:
+            raise KeyError(f"stream {stream_id!r} is not on any shard")
+        if dst is None:
+            order = routing.rank_shards(stream_id, self.shard_keys)
+            dst = next((i for i in order
+                        if i != src and self._routable[i]), None)
+            if dst is None:
+                raise ValueError(
+                    f"stream {stream_id!r}: no routable destination shard "
+                    f"other than its current shard {src}")
+        else:
+            if not (0 <= dst < len(self.shards)):
+                raise ValueError(f"no such shard: {dst}")
+            if not self._routable[dst]:
+                raise ValueError(
+                    f"shard {dst} is decommissioned; recommission it "
+                    "before migrating streams onto it")
+        if dst == src:
+            raise ValueError(f"stream {stream_id!r} is already on shard {src}")
+        state = self.shards[src].export_stream(stream_id)
+        self._owner[stream_id] = dst
+        self._migrations += 1
+        return self.shards[dst].import_stream(state)
+
+    def decommission(self, shard: int) -> list[str]:
+        """Drain shard ``shard``: remove it from routing and migrate every
+        stream it holds to that stream's next-best rendezvous shard (HRW:
+        streams on other shards are untouched).  The shard keeps ticking
+        (it is empty) and can be brought back with :meth:`recommission`.
+        Returns the migrated stream ids."""
+        if not (0 <= shard < len(self.shards)):
+            raise ValueError(f"no such shard: {shard}")
+        self._routable[shard] = False
+        if not any(self._routable):
+            self._routable[shard] = True
+            raise ValueError("cannot decommission the last routable shard")
+        moved = [sid for sid, o in self._owner.items()
+                 if o == shard and sid in self.shards[shard]._sessions]
+        for sid in moved:
+            state = self.shards[shard].export_stream(sid)
+            dst = routing.route(sid, self.shard_keys, self._routable)
+            self._owner[sid] = dst
+            self._migrations += 1
+            self.shards[dst].import_stream(state)
+        return moved
+
+    def recommission(self, shard: int) -> None:
+        """Return a drained shard to the routing set.  Existing streams
+        stay where they are; new streams whose rendezvous home is this
+        shard land here again."""
+        if not (0 <= shard < len(self.shards)):
+            raise ValueError(f"no such shard: {shard}")
+        self._routable[shard] = True
+
+    def shard_of(self, stream_id: str) -> int:
+        """Current shard of a stream, or -1 while fleet-spilled."""
+        shard = self._owner.get(stream_id)
+        if shard is not None and stream_id in self.shards[shard]._sessions:
+            return shard
+        if stream_id in self._spilled:
+            return -1
+        raise KeyError(f"stream {stream_id!r} is not attached")
+
+    # ------------------------------------------------------------------
+    # Introspection
+    # ------------------------------------------------------------------
+    @property
+    def n_active(self) -> int:
+        return sum(s.n_active for s in self.shards)
+
+    @property
+    def n_pending(self) -> int:
+        return sum(s.n_pending for s in self.shards)
+
+    @property
+    def n_spilled(self) -> int:
+        return len(self._spilled)
+
+    @property
+    def max_streams(self) -> int:
+        """Total resident capacity: shards * slots-per-shard."""
+        return sum(s.config.max_slots for s in self.shards)
+
+    def stats(self) -> dict[str, Any]:
+        """Fleet-wide roll-up: every scheduler/workload counter summed
+        across shards (``scheduler`` mirrors the single engine's composed
+        counter block), per-shard breakdown preserved under
+        ``per_shard``, fleet-level counters alongside."""
+        per_shard = [s.stats() for s in self.shards]
+        slots = self.max_streams
+
+        def tot(key):
+            return sum(p[key] for p in per_shard)
+
+        def sched_tot(key):
+            return sum(p["scheduler"][key] for p in per_shard)
+
+        return {
+            "shards": len(self.shards),
+            "routable": list(self._routable),
+            "backend": self.config.stream.backend,
+            "placement": self.config.placement,
+            "devices": [str(d) if d is not None else "host"
+                        for d in self._devices],
+            "fuse_ticks": self.config.fuse_ticks,
+            "max_streams": slots,
+            "active": tot("active"),
+            "pending": tot("pending"),
+            "spilled": len(self._spilled),
+            "completed": tot("completed"),
+            "stream_steps": tot("stream_steps"),
+            "ring_spills": tot("ring_spills"),
+            "ticks": self._ticks,
+            "global_spills": self._global_spills,
+            "migrations": self._migrations,
+            "scheduler": {
+                "max_slots": slots,
+                "active": sched_tot("active"),
+                "pending": sched_tot("pending"),
+                "occupancy": (sched_tot("active") / slots) if slots else 0.0,
+                "peak_active": sched_tot("peak_active"),
+                "admissions": sched_tot("admissions"),
+                "recycles": sched_tot("recycles"),
+                "spills": sched_tot("spills"),
+                "completed": sched_tot("completed"),
+                "cancelled": sched_tot("cancelled"),
+                "evictions": sched_tot("evictions"),
+                "ticks": sched_tot("ticks"),
+            },
+            "per_shard": per_shard,
+        }
+
+    # ------------------------------------------------------------------
+    # Internals
+    # ------------------------------------------------------------------
+    def _check_samples(self, stream_id: str, samples) -> np.ndarray:
+        return coerce_samples(samples, self.shards[0].kernel.input_dim,
+                              stream_id)
+
+    def _shard_has_room(self, i: int) -> bool:
+        if not self._routable[i]:
+            return False
+        shard, cap = self.shards[i], self.config.max_pending_per_shard
+        if shard.n_active < shard.config.max_slots:
+            return True
+        return cap is None or shard.n_pending < cap
+
+    def _pick_shard(self, stream_id: str) -> int | None:
+        """Home shard if admissible, else the least-loaded admissible
+        shard (deterministic tie-break by rendezvous rank), else None
+        (fleet spillover)."""
+        home = routing.route(stream_id, self.shard_keys, self._routable)
+        if self._shard_has_room(home):
+            return home
+        order = routing.rank_shards(stream_id, self.shard_keys)
+        candidates = [i for i in order if self._shard_has_room(i)]
+        if not candidates:
+            return None
+        load = lambda i: (self.shards[i].n_active + self.shards[i].n_pending)
+        return min(candidates, key=lambda i: (load(i), order.index(i)))
+
+    def _flush_spill(self) -> None:
+        """FIFO-drain the fleet spillover queue into shards with room.
+        Head-of-line blocking is intentional: admission stays FIFO-fair
+        fleet-wide (a later spill must not leapfrog an earlier one just
+        because some shard freed a slot)."""
+        while self._spilled:
+            sid = next(iter(self._spilled))
+            dst = self._pick_shard(sid)
+            if dst is None:
+                return
+            entry = self._spilled.pop(sid)
+            self.shards[dst].attach(
+                sid, total_steps=entry.total,
+                record_trajectory=entry.record_trajectory)
+            for chunk in entry.chunks:
+                self.shards[dst].feed(sid, chunk)
+            self._owner[sid] = dst
+
+    def _compact_owners(self) -> None:
+        """Drop owner entries for streams that finished on their shard.
+        A finishing stream releases shard-side only (the fleet is not in
+        that loop), so without compaction an always-online fleet gains one
+        dict entry per finished stream forever.  Entries whose shard still
+        holds a recorded trajectory are kept so ``trajectory()`` works
+        after completion, mirroring the single engine."""
+        self._owner = {
+            sid: shard for sid, shard in self._owner.items()
+            if sid in self.shards[shard]._sessions
+            or sid in self.shards[shard]._trajectories}
+
+    def _reclaim(self, stream_id: str) -> None:
+        """Drop a stale owner entry (stream finished on its shard), so the
+        id becomes reusable — mirroring single-engine behaviour where a
+        finished stream's id frees up."""
+        shard = self._owner.get(stream_id)
+        if shard is not None and stream_id not in self.shards[shard]._sessions:
+            del self._owner[stream_id]
+
+    def _stream_steps(self) -> int:
+        return sum(s._stream_steps for s in self.shards)
+
+    def _any_buffered(self) -> bool:
+        if any(s._any_buffered() for s in self.shards):
+            return True
+        return any(e.chunks for e in self._spilled.values())
+
+
+def classify_windows_fleet(fleet: FleetEngine, windows: np.ndarray,
+                           ids: Iterable[str] | None = None) -> np.ndarray:
+    """Fleet twin of :func:`repro.serve.streaming.classify_windows` —
+    that helper also works directly on a FleetEngine (same surface); this
+    alias exists so call sites read as fleet-scale on purpose."""
+    from repro.serve.streaming import classify_windows
+    return classify_windows(fleet, windows, ids)

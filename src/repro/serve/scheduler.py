@@ -32,11 +32,15 @@ buffers) laid out as arrays indexed by slot.  The contract is small:
 
 Consumers:
 
-* ``serve/streaming.py`` — Q15 sensor fleet; one work unit = one 50 Hz
+* ``serve/streaming.py`` — Q15 sensor streams; one work unit = one 50 Hz
   sample through the batched FastGRNN step kernel.
 * ``serve/engine.py`` — continuous-batching LM engine; one work unit = one
   decode token across all resident sequences, with a finished sequence's
   KV-cache slot re-prefilled from the pending queue on the next tick.
+* ``serve/fleet`` — N schedulers composed behind one front door; the
+  fleet drives the tick's two halves separately (``tick_begin`` /
+  ``tick_finish``) to fuse every shard's program step into one batched
+  kernel dispatch, and uses ``evict`` for live stream migration.
 
 Admission policy
 ----------------
@@ -121,6 +125,7 @@ class SlotScheduler:
         self._spills = 0          # submissions that had to wait in the queue
         self._completed = 0       # finished releases
         self._cancelled = 0       # cancelled releases (resident or pending)
+        self._evictions = 0       # migration releases (live stream moved away)
         self._ticks = 0           # productive ticks (advanced > 0)
         self._peak_active = 0
 
@@ -159,6 +164,24 @@ class SlotScheduler:
             return None
         raise KeyError(f"request {request_id!r} is not scheduled")
 
+    def evict(self, request_id: str) -> None:
+        """Withdraw a request for live migration.  Unlike :meth:`cancel`,
+        the release hook runs with reason ``"migrated"`` — no completion
+        semantics, no final event — and the departure is counted in
+        ``evictions``, not ``cancelled``.  The caller (the fleet front
+        door) is responsible for having snapshotted the per-slot state it
+        wants to carry to the destination shard *before* evicting."""
+        if request_id in self._slot_of:
+            self._release(self._slot_of[request_id], reason="migrated")
+            self._evictions += 1
+            return
+        if request_id in self._payloads:
+            self._pending.remove(request_id)
+            del self._payloads[request_id]
+            self._evictions += 1
+            return
+        raise KeyError(f"request {request_id!r} is not scheduled")
+
     # ------------------------------------------------------------------
     # Ticking
     # ------------------------------------------------------------------
@@ -166,10 +189,27 @@ class SlotScheduler:
         """One scheduling round: admit from the pending queue into free
         slots, step the program over the resident set, release finished
         slots (recycled next tick).  Returns the program's events."""
-        self._try_admit()
-        if not self.resident.any():
+        resident = self.tick_begin()
+        if resident is None:
             return []
-        report = self.program.step(self.resident.copy())
+        return self.tick_finish(self.program.step(resident))
+
+    def tick_begin(self) -> np.ndarray | None:
+        """First half of :meth:`tick`: run admission and return a copy of
+        the resident mask the program should step, or ``None`` when no slot
+        is resident.  Split out so a fleet front door can run admission on
+        every shard, batch all shards' program steps into one fused kernel
+        dispatch, and only then complete each shard with
+        :meth:`tick_finish` — without this scheduler knowing about shards."""
+        self._try_admit()
+        if not self._slot_of:        # O(1): no resident request anywhere
+            return None
+        return self.resident.copy()
+
+    def tick_finish(self, report: TickReport) -> list:
+        """Second half of :meth:`tick`: account the program's
+        :class:`TickReport` (productive-tick counter, finished-slot
+        releases) and return its events."""
         if report.advanced:
             self._ticks += 1
         for slot in report.finished:
@@ -210,6 +250,7 @@ class SlotScheduler:
             "spills": self._spills,
             "completed": self._completed,
             "cancelled": self._cancelled,
+            "evictions": self._evictions,
             "ticks": self._ticks,
             "admit_policy": self.admit_policy,
         }

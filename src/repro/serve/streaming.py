@@ -18,8 +18,9 @@ state, sample rings, window counters, and event emission.  The LM engine
 Workload state is a **NumPy slot table**, not per-session Python objects:
 per-slot step counters, window positions, stream lengths and sample
 cursors are columns of (S,)-shaped arrays, and buffered samples live in
-one (S, cap, d) ring buffer, so a tick costs a handful of vectorized ops +
-one fancy-index gather instead of a Python loop over every resident
+one offset-major (cap, S, d) ring buffer — a lockstep fleet's per-tick
+gather is then one contiguous (S, d) slab read — so a tick costs a
+handful of vectorized ops instead of a Python loop over every resident
 stream.  Python loops remain only on the rare paths: admission,
 completion, and event emission.
 
@@ -71,8 +72,12 @@ class StreamingConfig:
     reset_on_emit: bool = True   # tumbling windows (matches QRuntime.predict)
     backend: str = "exact"       # "exact" | "jit" | "pallas"
     interpret: bool = True       # pallas backend: interpret mode (CPU)
+    device: Any = None           # jax device for jit/pallas dispatch (fleet
+    # shard placement); None = default device / process-local NumPy
+    batch_events: bool = False   # emit one columnar StreamEventBatch per
+    # tick instead of per-stream StreamEvent objects (the fleet-scale path)
     ring_capacity: int = 256     # initial per-slot sample ring (grows 2x)
-    max_ring_capacity: int = 1024  # growth cap: the ring is (S, cap, d)
+    max_ring_capacity: int = 1024  # growth cap: the ring is (cap, S, d)
     # shared, so one stream's deep backlog must not allocate O(S * backlog);
     # samples beyond the cap spill to a per-slot chunk queue and drain into
     # the ring as it frees
@@ -91,6 +96,55 @@ class StreamEvent:
 
 
 @dataclasses.dataclass
+class StreamEventBatch:
+    """Columnar emission record (``StreamingConfig.batch_events=True``):
+    ONE object per tick carrying every stream that emitted, as arrays.
+    At fleet scale a lockstep window boundary means 100k+ simultaneous
+    emissions — building that many per-stream event objects costs more
+    than the tick's model math, so the fleet path delivers predictions
+    column-wise and lets the consumer fan out only where needed
+    (:meth:`events` expands to per-stream :class:`StreamEvent`)."""
+    stream_ids: list
+    final: np.ndarray            # (k,) bool — True = "final", else "window"
+    steps: np.ndarray            # (k,) int64
+    window_steps: np.ndarray     # (k,) int64
+    predictions: np.ndarray      # (k,) int32
+    logits: np.ndarray           # (k, C) f32
+    warm: np.ndarray             # (k,) bool
+
+    def __len__(self) -> int:
+        return len(self.stream_ids)
+
+    def events(self) -> list[StreamEvent]:
+        """Expand to per-stream events (convenience / compatibility)."""
+        return [StreamEvent(stream_id=sid, kind="final" if f else "window",
+                            step=int(st), window_step=int(ws),
+                            prediction=int(p), logits=lg, warm=bool(w))
+                for sid, f, st, ws, p, lg, w in zip(
+                    self.stream_ids, self.final, self.steps,
+                    self.window_steps, self.predictions, self.logits,
+                    self.warm)]
+
+
+@dataclasses.dataclass
+class StreamState:
+    """Portable bit-exact snapshot of one live stream — the unit of fleet
+    migration.  :meth:`StreamingEngine.export_stream` detaches a stream
+    into this form (hidden state, counters, every not-yet-consumed sample,
+    trajectory tap) and :meth:`StreamingEngine.import_stream` re-attaches
+    it on any engine built from the same weights; the continued trajectory
+    is bit-identical to never having moved (exact backend)."""
+    stream_id: str
+    h: np.ndarray                        # (H,) f32 hidden state
+    steps: int                           # total samples consumed so far
+    wstep: int                           # position in the current window
+    total: int | None                    # finite stream length; None = open
+    samples: np.ndarray                  # (k, d) f32 buffered, unconsumed
+    record_trajectory: bool = False
+    trajectory: list = dataclasses.field(default_factory=list)
+
+
+@dataclasses.dataclass
 class _Session:
     """Thin per-stream handle.  Counters/cursors live in the engine's slot
     table; this only tracks identity, placement, the not-yet-placed sample
@@ -102,6 +156,37 @@ class _Session:
     chunks: collections.deque = dataclasses.field(
         default_factory=collections.deque)   # buffered while pending
     record_trajectory: bool = False
+    restore: tuple | None = None         # (h, steps, wstep) migrated-in state
+
+
+def coerce_samples(samples, input_dim: int, stream_id: str) -> np.ndarray:
+    """Canonicalize fed samples to (k, input_dim) float32 — the one
+    validation shared by the engine's ``feed`` and the fleet's spillover
+    queue, so the two paths cannot drift."""
+    samples = np.asarray(samples, np.float32)
+    if samples.ndim == 1:
+        samples = samples[None, :]
+    if samples.ndim != 2 or samples.shape[1] != input_dim:
+        raise ValueError(
+            f"stream {stream_id!r}: samples must be (k, "
+            f"{input_dim}), got {samples.shape}")
+    return samples
+
+
+def coerce_qp(params_or_qp, quant: q.QuantConfig | None = None
+              ) -> q.QuantizedParams:
+    """Normalize any accepted model form to :class:`QuantizedParams`:
+    a :class:`ModelArtifact` yields its quantized params (deployed config:
+    FP32 acts through the LUT — the artifact's deploy calibration scales
+    are export-compiler scales, NOT activation-storage scales; opt into
+    Table V storage quant via ``from_artifact(quantized_acts=True)``);
+    a float param pytree gets per-tensor Q15 PTQ (Appendix B).  Shared by
+    :class:`StreamingEngine` and the fleet front door."""
+    if isinstance(params_or_qp, ModelArtifact):
+        return params_or_qp.require_qp()
+    if isinstance(params_or_qp, q.QuantizedParams):
+        return params_or_qp
+    return q.quantize_params(params_or_qp, quant or q.QuantConfig())
 
 
 class StreamingEngine:
@@ -111,22 +196,14 @@ class StreamingEngine:
                  *, quant: q.QuantConfig | None = None,
                  act_scales: dict[str, float] | None = None,
                  naive_acts: bool = False):
-        if isinstance(params_or_qp, ModelArtifact):
-            # deployed config: FP32 acts through the LUT.  The artifact's
-            # deploy calibration scales are export-compiler scales, NOT
-            # activation-storage scales; opt into Table V storage quant
-            # explicitly (from_artifact(quantized_acts=True)).
-            self.qp = params_or_qp.require_qp()
-        elif isinstance(params_or_qp, q.QuantizedParams):
-            self.qp = params_or_qp
-        else:  # float param pytree -> per-tensor Q15 PTQ (Appendix B)
-            self.qp = q.quantize_params(params_or_qp, quant or q.QuantConfig())
+        self.qp = coerce_qp(params_or_qp, quant)
         config = config or StreamingConfig()
         self.config = config
         self.kernel = Q15StreamStep(self.qp, act_scales=act_scales,
                                     naive_acts=naive_acts,
                                     backend=config.backend,
-                                    interpret=config.interpret)
+                                    interpret=config.interpret,
+                                    device=config.device)
         S, d = config.max_slots, self.kernel.input_dim
         self._h = self.kernel.init_state(S)
         self._x = np.zeros((S, d), np.float32)
@@ -137,9 +214,15 @@ class StreamingEngine:
         self._head = np.zeros(S, np.int64)       # ring read cursor (absolute)
         self._tail = np.zeros(S, np.int64)       # ring write cursor (absolute)
         self._cap = max(8, min(config.ring_capacity, config.max_ring_capacity))
-        self._ring = np.zeros((S, self._cap, d), np.float32)
+        # ring layout is (cap, S, d) — offset-major, not slot-major: a
+        # fleet of 50 Hz sensors advances in lockstep, so the per-tick
+        # gather usually reads ONE contiguous (S, d) slab instead of S
+        # strided rows (measured ~50x cheaper at 16k slots; the slot-major
+        # layout made the gather cost more than the step kernel)
+        self._ring = np.zeros((self._cap, S, d), np.float32)
         self._spill: dict[int, collections.deque] = {}  # slot -> chunk queue
         self._tap = np.zeros(S, bool)            # trajectory-tap flag
+        self._n_taps = 0                         # fast skip of the tap scan
         # --- placement: delegated to the shared slot scheduler ---------
         self._sched = SlotScheduler(S, HostProgram(self))
         self._sessions: dict[str, _Session] = {}
@@ -194,13 +277,7 @@ class StreamingEngine:
     def feed(self, stream_id: str, samples: np.ndarray) -> None:
         """Append samples ((d,) or (k, d)) to a stream's input buffer."""
         s = self._sessions[stream_id]
-        samples = np.asarray(samples, np.float32)
-        if samples.ndim == 1:
-            samples = samples[None, :]
-        if samples.ndim != 2 or samples.shape[1] != self.kernel.input_dim:
-            raise ValueError(
-                f"stream {stream_id!r}: samples must be (k, "
-                f"{self.kernel.input_dim}), got {samples.shape}")
+        samples = coerce_samples(samples, self.kernel.input_dim, stream_id)
         if s.slot < 0:
             s.chunks.append(samples)
         else:
@@ -215,6 +292,78 @@ class StreamingEngine:
         ev = self._sched.cancel(stream_id)
         self._sessions.pop(stream_id, None)   # pending path (resident path
         return ev                             # popped in _release_slot)
+
+    # ------------------------------------------------------------------
+    # Live migration (fleet rebalancing / shard drain)
+    # ------------------------------------------------------------------
+    def export_stream(self, stream_id: str) -> StreamState:
+        """Detach a stream into a portable :class:`StreamState` snapshot:
+        hidden state, step/window counters, every buffered-but-unconsumed
+        sample (ring + spill backlog, FIFO order preserved), and the
+        trajectory tap.  No event is emitted and the departure is counted
+        as a scheduler *eviction*, not a cancellation.  Re-attaching the
+        snapshot via :meth:`import_stream` on any engine built from the
+        same weights continues the stream bit-identically (exact backend)."""
+        if stream_id not in self._sessions:
+            raise KeyError(f"stream {stream_id!r} is not attached")
+        s = self._sessions[stream_id]
+        d = self.kernel.input_dim
+        if s.slot >= 0:
+            slot = s.slot
+            n = int(self._tail[slot] - self._head[slot])
+            idx = (self._head[slot] + np.arange(n)) % self._cap
+            parts = [self._ring[idx, slot]] if n else []
+            parts += list(self._spill.get(slot, ()))
+            state = StreamState(
+                stream_id=stream_id,
+                h=self._h[slot].copy(),
+                steps=int(self._steps[slot]),
+                wstep=int(self._wstep[slot]),
+                total=None if self._total[slot] < 0 else int(self._total[slot]),
+                samples=(np.concatenate(parts) if parts
+                         else np.zeros((0, d), np.float32)),
+                record_trajectory=s.record_trajectory,
+                trajectory=self._trajectories.pop(stream_id, []))
+        else:
+            # pending: never stepped HERE — but a migrated-in stream that
+            # is still waiting for a slot carries its restored hidden
+            # state/counters on the session; those must travel onward, or
+            # a second migration would silently rewind the stream to zero
+            if s.restore is not None:
+                h0, steps0, wstep0 = s.restore
+            else:
+                h0 = np.zeros(self.kernel.hidden_dim, np.float32)
+                steps0 = wstep0 = 0
+            parts = list(s.chunks)
+            state = StreamState(
+                stream_id=stream_id,
+                h=h0, steps=steps0, wstep=wstep0, total=s.total,
+                samples=(np.concatenate(parts) if parts
+                         else np.zeros((0, d), np.float32)),
+                record_trajectory=s.record_trajectory,
+                trajectory=self._trajectories.pop(stream_id, []))
+        self._sched.evict(stream_id)          # resident path pops session
+        self._sessions.pop(stream_id, None)   # pending path
+        return state
+
+    def import_stream(self, state: StreamState) -> str:
+        """Re-attach a migrated stream from a :class:`StreamState`.
+        Returns ``"active"``/``"pending"`` like :meth:`attach`.  The
+        snapshot's hidden state and counters are restored into the slot at
+        admission time, so a stream that waits in the pending queue first
+        still resumes exactly where it left off."""
+        if state.stream_id in self._sessions:
+            raise ValueError(f"stream {state.stream_id!r} already attached")
+        s = _Session(stream_id=state.stream_id, total=state.total,
+                     record_trajectory=state.record_trajectory,
+                     restore=(np.asarray(state.h, np.float32).copy(),
+                              int(state.steps), int(state.wstep)))
+        self._sessions[state.stream_id] = s
+        if state.record_trajectory:
+            self._trajectories[state.stream_id] = list(state.trajectory)
+        if len(state.samples):
+            s.chunks.append(np.asarray(state.samples, np.float32))
+        return self._sched.submit(state.stream_id, s)
 
     # ------------------------------------------------------------------
     # Stepping
@@ -266,27 +415,72 @@ class StreamingEngine:
         self._head[slot] = 0
         self._tail[slot] = 0
         self._tap[slot] = s.record_trajectory
+        self._n_taps += int(s.record_trajectory)
+        if s.restore is not None:     # migrated-in stream: resume, don't reset
+            h0, steps0, wstep0 = s.restore
+            if not self._h.flags.writeable:   # jit/pallas outputs are
+                self._h = self._h.copy()      # read-only numpy views
+            self._h[slot] = h0
+            self._steps[slot] = steps0
+            self._wstep[slot] = wstep0
+            s.restore = None
         while s.chunks:
             self._ring_write(slot, s.chunks.popleft())
 
     def _advance(self, resident: np.ndarray) -> TickReport:
+        handle = self._advance_begin(resident)
+        if handle is None:
+            return TickReport()
+        avail, rows = handle
+        h_new = self.kernel.step_rows(self._h, self._x, avail, rows)
+        return self._advance_finish(handle, h_new)
+
+    def _advance_begin(self, resident: np.ndarray):
+        """Phase one of a tick: compute the advancing-row set and gather one
+        sample per advancing slot from the ring into ``self._x``.  Returns
+        ``(avail, rows)`` for :meth:`_advance_finish`, or ``None`` when no
+        resident stream has a buffered sample.  Split from the kernel call
+        so the fleet front door can batch every shard's step into one fused
+        kernel dispatch per tick (see ``serve/fleet``)."""
         avail = resident & (self._tail > self._head)
         rows = np.nonzero(avail)[0]
         if rows.size == 0:
-            return TickReport()
+            return None
         # gather one sample per advancing slot from the ring (vectorized)
         x = self._x
-        x[:] = 0.0
-        x[rows] = self._ring[rows, self._head[rows] % self._cap]
-        self._h = self.kernel.step_rows(self._h, x, avail, rows)
-        self._head[rows] += 1
-        self._steps[rows] += 1
-        self._wstep[rows] += 1
+        full = rows.size == x.shape[0]
+        heads = self._head if full else self._head[rows]
+        if np.all(heads == heads[0]):  # lockstep fleet: contiguous slab
+            o = int(heads[0]) % self._cap
+            if full:
+                x[:] = self._ring[o]
+            else:
+                x[:] = 0.0
+                x[rows] = self._ring[o, rows]
+        else:                          # streams drifted apart: 2-d gather
+            x[:] = 0.0
+            x[rows] = self._ring[heads % self._cap, rows]
+        return (avail, rows)
+
+    def _advance_finish(self, handle, h_new: np.ndarray) -> TickReport:
+        """Phase two of a tick: accept the stepped hidden states and do the
+        bookkeeping — cursors, counters, trajectory taps, window/final
+        emission, tumbling-window resets."""
+        avail, rows = handle
+        self._h = h_new
+        if rows.size == self._head.size:     # steady state: every slot moved
+            self._head += 1
+            self._steps += 1
+            self._wstep += 1
+        else:
+            self._head[rows] += 1
+            self._steps[rows] += 1
+            self._wstep[rows] += 1
         self._stream_steps += int(rows.size)
         if self._spill:
             self._drain_spill()
 
-        if np.any(self._tap[rows]):
+        if self._n_taps and np.any(self._tap[rows]):
             for i in np.nonzero(self._tap & avail)[0]:
                 sid = self._sched.request_at(i)
                 self._trajectories[sid].append(self._h[i].copy())
@@ -297,20 +491,24 @@ class StreamingEngine:
         finished = avail & (self._total >= 0) & (self._steps >= self._total)
         emit_rows = np.nonzero(at_window | finished)[0]
         events: list[StreamEvent] = []
-        if emit_rows.size:
+        finished_rows: list[int] = []
+        if emit_rows.size:               # rare tick: something emits
             logits = self.kernel.head_logits(self._h[emit_rows])
-            for i, slot in enumerate(emit_rows):
-                kind = "window" if at_window[slot] else "final"
-                events.append(self._event(
-                    self._sched.request_at(int(slot)), int(slot), kind,
-                    int(self._wstep[slot]), logits[i]))
-
-        if np.any(at_window):
-            self._wstep[at_window] = 0
-            if self.config.reset_on_emit:
-                self._h = self.kernel.reset(self._h, at_window)
-        return TickReport(events=events,
-                          finished=np.nonzero(finished)[0].tolist(),
+            if self.config.batch_events:
+                events.append(self._event_batch(emit_rows, at_window,
+                                                logits))
+            else:
+                for i, slot in enumerate(emit_rows):
+                    kind = "window" if at_window[slot] else "final"
+                    events.append(self._event(
+                        self._sched.request_at(int(slot)), int(slot), kind,
+                        int(self._wstep[slot]), logits[i]))
+            finished_rows = np.nonzero(finished)[0].tolist()
+            if np.any(at_window):
+                self._wstep[at_window] = 0
+                if self.config.reset_on_emit:
+                    self._h = self.kernel.reset(self._h, at_window)
+        return TickReport(events=events, finished=finished_rows,
                           advanced=int(rows.size))
 
     def _release_slot(self, slot: int, stream_id: str,
@@ -324,6 +522,7 @@ class StreamingEngine:
         s = self._sessions.pop(stream_id, None)
         if s is not None:
             s.slot = -1
+        self._n_taps -= int(self._tap[slot])
         self._tap[slot] = False
         self._head[slot] = 0
         self._tail[slot] = 0
@@ -354,7 +553,7 @@ class StreamingEngine:
         take = min(space, k)
         if take:
             idx = (self._tail[slot] + np.arange(take)) % self._cap
-            self._ring[slot, idx] = samples[:take]
+            self._ring[idx, slot] = samples[:take]
             self._tail[slot] += take
         if take < k:                     # backlog beyond the shared ring
             self._spill[slot] = collections.deque([samples[take:]])
@@ -372,7 +571,7 @@ class StreamingEngine:
                 chunk = q.popleft()
                 take = min(space, len(chunk))
                 idx = (self._tail[slot] + np.arange(take)) % self._cap
-                self._ring[slot, idx] = chunk[:take]
+                self._ring[idx, slot] = chunk[:take]
                 self._tail[slot] += take
                 if take < len(chunk):
                     q.appendleft(chunk[take:])
@@ -387,16 +586,31 @@ class StreamingEngine:
         new_cap = min(new_cap, max(self.config.max_ring_capacity, self._cap))
         if new_cap == self._cap:
             return
-        ring = np.zeros((self._ring.shape[0], new_cap, self._ring.shape[2]),
+        ring = np.zeros((new_cap, self._ring.shape[1], self._ring.shape[2]),
                         np.float32)
         navail = self._tail - self._head
         for slot in np.nonzero(navail > 0)[0]:
             n = int(navail[slot])
             idx = (self._head[slot] + np.arange(n)) % self._cap
-            ring[slot, :n] = self._ring[slot, idx]
+            ring[:n, slot] = self._ring[idx, slot]
         self._head[:] = 0                 # re-base cursors onto the copy
         self._tail[:] = navail
         self._ring, self._cap = ring, new_cap
+
+    def _event_batch(self, emit_rows: np.ndarray, at_window: np.ndarray,
+                     logits: np.ndarray) -> StreamEventBatch:
+        """Columnar emission: every per-stream field sliced as an array;
+        the only per-row Python is the slot -> stream-id lookup."""
+        req = self._sched._slot_request
+        steps = self._steps[emit_rows]
+        return StreamEventBatch(
+            stream_ids=[req[i] for i in emit_rows.tolist()],
+            final=~at_window[emit_rows],
+            steps=steps,
+            window_steps=self._wstep[emit_rows],
+            predictions=np.argmax(logits, axis=1).astype(np.int32),
+            logits=np.asarray(logits, np.float32),
+            warm=steps >= self.config.warmup_samples)
 
     def _event(self, stream_id: str, slot: int, kind: str, window_step: int,
                logits: np.ndarray) -> StreamEvent:
@@ -448,6 +662,10 @@ def classify_windows(engine: StreamingEngine, windows: np.ndarray,
     for sid, w in zip(ids, windows):
         engine.attach(sid, w, total_steps=len(w))
     events = engine.drain()
-    final = {e.stream_id: e.prediction for e in events
-             if e.kind in ("window", "final")}
+    final: dict[str, int] = {}
+    for e in events:
+        if isinstance(e, StreamEventBatch):
+            final.update(zip(e.stream_ids, (int(p) for p in e.predictions)))
+        elif e.kind in ("window", "final"):
+            final[e.stream_id] = e.prediction
     return np.array([final[sid] for sid in ids], np.int32)

@@ -2,6 +2,17 @@ import os
 import subprocess
 import sys
 
+# Fake 8 XLA host devices for the whole tier-1 run (must be set before
+# jax initializes, hence module scope here rather than a fixture body).
+# CPU-only runners then exercise the multi-device paths in-process: the
+# fleet's per-device shard placement (tests/test_fleet.py) and the
+# in-process smokes in tests/test_distributed.py.  Honors a pre-set
+# XLA_FLAGS that already pins a device count (e.g. an external harness).
+_flags = os.environ.get("XLA_FLAGS", "")
+if "xla_force_host_platform_device_count" not in _flags:
+    os.environ["XLA_FLAGS"] = (
+        _flags + " --xla_force_host_platform_device_count=8").strip()
+
 import numpy as np
 import pytest
 

@@ -12,8 +12,9 @@ Covers the PR-4 acceptance contract:
     argmax through the pure-integer qvm;
   * every runtime consumes the artifact (QRuntime / StreamingEngine /
     build_image / run_parity) with identical numerics;
-  * the deprecation shims (``quantize_for_serving`` / ``dequantize_params``
-    / legacy 2-arg ``build_image``) still work and warn;
+  * the one-release deprecation shims (``quantize_for_serving`` /
+    ``dequantize_params`` / legacy 2-arg ``build_image``) are gone and the
+    migration path reproduces identical bytes;
   * the ``python -m repro.compress`` CLI smoke + size-report schema.
 """
 import json
@@ -333,24 +334,15 @@ def test_q7_full_protocol_argmax_parity():
 
 
 # ---------------------------------------------------------------------------
-# Deprecation shims (one release of backward compatibility)
+# Post-deprecation surface (the one-release shims are gone)
 # ---------------------------------------------------------------------------
 
-def test_quantize_for_serving_shim_warns_and_matches():
-    from repro.serve.engine import dequantize_params, quantize_for_serving
-    params = {"layer": {"w": np.linspace(-1, 1, 12, dtype=np.float32)
-                        .reshape(3, 4), "b": np.zeros(3, np.float32)}}
-    with pytest.warns(DeprecationWarning, match="quantize_tree"):
-        qt_old, sc_old = quantize_for_serving(params, 8)
-    qt_new, sc_new = quantize_tree(params, 8)
-    np.testing.assert_array_equal(np.asarray(qt_old["layer"]["w"]),
-                                  np.asarray(qt_new["layer"]["w"]))
-    assert float(sc_old["layer"]["w"]) == float(sc_new["layer"]["w"])
-    with pytest.warns(DeprecationWarning, match="dequantize_tree"):
-        deq = dequantize_params(qt_old, sc_old)
-    np.testing.assert_array_equal(
-        np.asarray(deq["layer"]["w"], np.float32),
-        np.asarray(dequantize_tree(qt_new, sc_new)["layer"]["w"], np.float32))
+def test_serve_engine_shims_removed():
+    """quantize_for_serving / dequantize_params served their one release
+    as DeprecationWarning shims; the canonical home is repro.compress."""
+    import repro.serve.engine as se
+    assert not hasattr(se, "quantize_for_serving")
+    assert not hasattr(se, "dequantize_params")
 
 
 def test_quantize_tree_accepts_q_format_names():
@@ -361,11 +353,17 @@ def test_quantize_tree_accepts_q_format_names():
         assert np.asarray(qt["w"]).dtype == width
 
 
-def test_legacy_build_image_shim_warns(artifact):
+def test_legacy_build_image_pair_rejected(artifact):
+    """The 2-arg build_image(qp, act_scales) shim is gone: a bare
+    QuantizedParams is rejected with a migration hint, and wrapping the
+    pair in a ModelArtifact reproduces the image byte-for-byte."""
+    from repro.compress import ModelArtifact
     from repro.deploy.image import build_image
-    with pytest.warns(DeprecationWarning, match="ModelArtifact"):
-        img = build_image(artifact.qp, dict(artifact.act_scales))
-    assert img.to_bytes() == build_image(artifact).to_bytes()
+    with pytest.raises(TypeError, match="ModelArtifact"):
+        build_image(artifact.qp)
+    wrapped = ModelArtifact(qp=artifact.qp,
+                            act_scales=dict(artifact.act_scales))
+    assert build_image(wrapped).to_bytes() == build_image(artifact).to_bytes()
 
 
 # ---------------------------------------------------------------------------

@@ -89,13 +89,14 @@ def test_budget_audit_avr_and_msp430(model):
 def test_image_rejects_plain_calibration(model):
     """Scales from the non-deploy calibrate() miss the input/intermediate
     entries the integer engine needs — export must fail loudly."""
+    from repro.compress import ModelArtifact
     from repro.core.qruntime import calibrate
     from repro.deploy.image import build_image
     qp, _, _ = model
     rt = QRuntime(qp)
     bad = calibrate(rt, hapt.load("train", n=2).windows)
     with pytest.raises(ValueError, match="calibrate_deploy"):
-        build_image(qp, bad)
+        build_image(ModelArtifact(qp=qp, act_scales=dict(bad)))
 
 
 # ---------------------------------------------------------------------------
@@ -243,11 +244,12 @@ def test_int_c_parity_survives_requant_saturation(model):
     full-scale inputs, the gate-path requant exceeds int32 — the C must
     saturate exactly like the emulator (it used to wrap via an
     implementation-defined narrowing cast, silently breaking the twin)."""
+    from repro.compress import ModelArtifact
     from repro.deploy.image import build_image
     qp, act_scales, _ = model
     tiny = dict(act_scales)
     tiny["h"] = float(np.float32(0.001 * 1.1 / 32767))
-    img = build_image(qp, tiny)
+    img = build_image(ModelArtifact(qp=qp, act_scales=tiny))
     vm = QVM(img)
     xq = np.full((4, 16, img.d), I16_MAX, np.int16)
     xq[1] = I16_MIN
@@ -356,13 +358,15 @@ def test_full_protocol_all_quantized_paths_agree():
     path over the full 3,399-window synthetic HAPT test split, at the
     pinned protocol seed (the paper reports '100% ... MCU seed 0;
     99.91-100% across five seeds')."""
+    from repro.compress import ModelArtifact
     from repro.deploy import verify
     from repro.deploy.image import build_image
     from repro.core.qruntime import calibrate_deploy
     from repro.core.quantization import quantize_params, QuantConfig
     params, calib = verify.protocol_model()
     qp = quantize_params(params, QuantConfig())
-    img = build_image(qp, calibrate_deploy(QRuntime(qp), calib))
+    img = build_image(ModelArtifact(
+        qp=qp, act_scales=dict(calibrate_deploy(QRuntime(qp), calib))))
     test = hapt.load("test")
     assert len(test.windows) == 3399
     report = verify.run_parity(img, qp, test.windows, use_fp32=False)

@@ -1,33 +1,77 @@
-"""Multi-device semantics on an 8-fake-device CPU mesh (subprocess —
-the pytest process is locked to 1 device).  Verifies:
-  * sharded train step == single-device step numerically;
-  * vocab-parallel CE == plain CE;
-  * int8/bf16 compressed psum + error feedback;
-  * GPipe pipeline == sequential stage application;
-  * checkpoint resharding across mesh shapes (elasticity).
+"""Multi-device semantics on an 8-fake-device CPU mesh.
+
+Two tiers:
+
+* **In-process smokes** (below, not slow) — conftest.py forces
+  ``--xla_force_host_platform_device_count=8`` before jax initializes, so
+  the pytest process itself has 8 host devices: device enumeration,
+  per-device placement of jitted compute (the substrate the fleet's
+  per-shard device placement rides — see tests/test_fleet.py), and a
+  pmap collective.  These run on every jax this repo supports.
+* **Explicit-sharding suite** (subprocess, slow) — verifies:
+  sharded train step == single-device step numerically; vocab-parallel
+  CE == plain CE; int8/bf16 compressed psum + error feedback; GPipe
+  pipeline == sequential stages; checkpoint resharding across mesh
+  shapes.  Drives the modern explicit-sharding APIs (jax.make_mesh with
+  axis_types, jax.sharding.AxisType, top-level jax.shard_map); on
+  containers pinned to older jax (e.g. 0.4.x) those tests — and only
+  those — skip.
 """
 import jax
+import jax.numpy as jnp
 import jax.sharding
+import numpy as np
 import pytest
 
 from conftest import run_subprocess
 
-# The suite drives the modern explicit-sharding APIs (jax.make_mesh with
-# axis_types, jax.sharding.AxisType, top-level jax.shard_map).  Containers
-# pinned to older jax (e.g. 0.4.x: AxisType missing, shard_map still under
-# jax.experimental) cannot run it no matter how many host devices are
-# faked — skip the whole module instead of failing x6.
 _MISSING = [name for name, ok in [
     ("jax.sharding.AxisType", hasattr(jax.sharding, "AxisType")),
     ("jax.shard_map", hasattr(jax, "shard_map")),
     ("jax.make_mesh", hasattr(jax, "make_mesh")),
 ] if not ok]
-pytestmark = pytest.mark.skipif(
+needs_explicit_sharding = pytest.mark.skipif(
     bool(_MISSING),
     reason=f"jax {jax.__version__} lacks {', '.join(_MISSING)} "
            "(multi-host sharding suite needs the explicit-sharding APIs)")
 
 
+# ---------------------------------------------------------------------------
+# In-process multi-device smokes (every supported jax; not slow)
+# ---------------------------------------------------------------------------
+
+def test_host_devices_forced_in_process():
+    """conftest.py's XLA_FLAGS setting took effect: the tier-1 process
+    itself has >= 8 host devices, so multi-device paths (fleet shard
+    placement included) are exercised without a subprocess."""
+    assert jax.device_count() >= 8
+
+
+def test_per_device_compute_placement():
+    """device_put pins data AND the jitted computation that consumes it
+    to each fake host device — the mechanism fleet shard placement uses."""
+    results = []
+    for i, dev in enumerate(jax.devices()[:4]):
+        x = jax.device_put(jnp.arange(4.0) + i, dev)
+        y = jax.jit(lambda v: (v * 2.0).sum())(x)
+        assert y.devices() == {dev}
+        results.append(float(y))
+    assert results == [12.0, 20.0, 28.0, 36.0]
+
+
+def test_pmap_collective_across_host_devices():
+    n = jax.device_count()
+    x = jnp.arange(n, dtype=jnp.float32)
+    out = jax.pmap(lambda v: jax.lax.psum(v, "i"), axis_name="i")(x)
+    np.testing.assert_allclose(np.asarray(out),
+                               np.full(n, float(x.sum())))
+
+
+# ---------------------------------------------------------------------------
+# Explicit-sharding suite (subprocess; needs modern jax APIs)
+# ---------------------------------------------------------------------------
+
+@needs_explicit_sharding
 @pytest.mark.slow
 def test_sharded_train_step_matches_single_device():
     out = run_subprocess("""
@@ -72,6 +116,7 @@ print("OK")
     assert "OK" in out
 
 
+@needs_explicit_sharding
 @pytest.mark.slow
 def test_compressed_psum_error_feedback():
     out = run_subprocess("""
@@ -101,6 +146,7 @@ print("OK")
     assert "OK" in out
 
 
+@needs_explicit_sharding
 @pytest.mark.slow
 def test_vocab_parallel_ce_matches_plain():
     out = run_subprocess("""
@@ -130,6 +176,7 @@ print("OK")
     assert "OK" in out
 
 
+@needs_explicit_sharding
 @pytest.mark.slow
 def test_pipeline_matches_sequential():
     out = run_subprocess("""
@@ -156,6 +203,7 @@ print("OK")
     assert "OK" in out
 
 
+@needs_explicit_sharding
 @pytest.mark.slow
 def test_checkpoint_elastic_resharding():
     out = run_subprocess("""
@@ -179,6 +227,7 @@ print("OK")
     assert "OK" in out
 
 
+@needs_explicit_sharding
 @pytest.mark.slow
 def test_sp_dense_and_splitkv_match_reference():
     out = run_subprocess("""

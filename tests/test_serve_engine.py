@@ -12,7 +12,8 @@ import pytest
 
 import repro.configs as C
 from repro.models import transformer as T
-from repro.serve.engine import Engine, ServeConfig, quantize_for_serving
+from repro.compress import quantize_tree
+from repro.serve.engine import Engine, ServeConfig
 
 
 def _setup(arch, batch=4, prompt=8):
@@ -155,14 +156,16 @@ def test_window_boundary_policy_matches_continuous_tokens():
 
 
 # ---------------------------------------------------------------------------
-# Satellites: quantize_for_serving API, config hygiene, quantized head
+# Satellites: quantize_tree API, config hygiene, quantized head
 # ---------------------------------------------------------------------------
 
-def test_quantize_for_serving_returns_qtree_and_scales():
-    """The documented contract is a 2-tuple (qtree, scales); scales carries
-    a 0-d zero for every leaf left in floating point."""
+def test_quantize_tree_returns_qtree_and_scales():
+    """The engine quantizes through repro.compress.quantize_tree (the
+    serve.engine.quantize_for_serving shim is gone); the contract is a
+    2-tuple (qtree, scales) with a 0-d zero scale for every leaf left in
+    floating point."""
     cfg, params, _ = _setup("deepseek-7b")
-    out = quantize_for_serving(params, 8)
+    out = quantize_tree(params, 8)
     assert isinstance(out, tuple) and len(out) == 2
     qt, sc = out
     flat_q = jax.tree_util.tree_leaves(qt)
