@@ -51,6 +51,20 @@ SCHEMAS: dict[str, dict] = {
                      "stream_steps_per_sec", "realtime_streams_50hz",
                      "sustained_realtime_50hz"],
     },
+    # benchmarks/failover_bench.py: crash/recovery latency for a shard
+    # holding `slots_per_shard` streams.  `recovery` pins the headline
+    # (p50/p99 unavailability window of a 16k-stream shard crash).
+    "fleet_failover": {
+        "top": ["benchmark", "model", "backend", "shards",
+                "slots_per_shard", "snapshot_every", "samples_per_stream",
+                "host", "results", "recovery"],
+        "row": ["rep", "streams_recovered", "replayed_samples",
+                "wire_bytes", "snapshot_ms", "recovery_ms",
+                "recovery_us_per_stream"],
+        "recovery": ["streams", "recovery_ms_p50", "recovery_ms_p99",
+                     "snapshot_ms_p50", "recovery_us_per_stream_p50",
+                     "wire_mb_per_shard"],
+    },
     # `python -m repro.compress --report`: one compression-pipeline run.
     # `size` is ModelArtifact.size_report() — per-tensor dense vs
     # CSR-packed bytes at the artifact's true weight width (Q15/Q7).
@@ -93,7 +107,7 @@ def validate(path: str) -> tuple[str | None, list[str]]:
     for key in schema["top"]:
         if key not in record:
             errors.append(f"{path}: missing top-level key {key!r}")
-    for sub in ("size", "capacity"):
+    for sub in ("size", "capacity", "recovery"):
         if sub not in schema:
             continue
         block = record.get(sub)

@@ -1,12 +1,21 @@
 """Sharded fleet-serving subsystem: route 100k+ concurrent Q15 sensor
 streams across per-shard slot schedulers behind one FleetEngine front
-door.  See ``docs/fleet.md`` for routing, migration, drain semantics and
-measured scaling."""
+door, with wire-format stream checkpoints and bit-exact crash failover.
+See ``docs/fleet.md`` for routing, migration, drain and failover
+semantics and measured scaling."""
 from .engine import FleetConfig, FleetEngine, classify_windows_fleet
+from .faults import PHASES, FaultInjector, ScheduledFaults
 from .placement import shard_devices
 from .routing import hrw_weight, rank_shards, route
+from .wire import (WIRE_MAJOR, WIRE_MINOR, WireCorruptError, WireError,
+                   WireTruncatedError, WireVersionError,
+                   decode_stream_state, encode_stream_state)
 
 __all__ = [
     "FleetConfig", "FleetEngine", "classify_windows_fleet",
     "shard_devices", "hrw_weight", "rank_shards", "route",
+    "PHASES", "FaultInjector", "ScheduledFaults",
+    "WIRE_MAJOR", "WIRE_MINOR", "WireError", "WireVersionError",
+    "WireTruncatedError", "WireCorruptError",
+    "encode_stream_state", "decode_stream_state",
 ]

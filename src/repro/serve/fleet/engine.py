@@ -59,10 +59,11 @@ import numpy as np
 from repro.core import quantization as q
 from repro.kernels.fastgrnn_cell.ops import Q15StreamStep
 from repro.serve.scheduler import TickReport
-from repro.serve.streaming import (StreamEvent, StreamState, StreamingConfig,
-                                   StreamingEngine, coerce_qp,
-                                   coerce_samples)
-from . import placement, routing
+from repro.serve.streaming import (StreamEvent, StreamEventBatch, StreamState,
+                                   StreamingConfig, StreamingEngine,
+                                   coerce_qp, coerce_samples)
+from . import placement, routing, wire
+from .faults import PHASES, FaultInjector
 
 
 @dataclasses.dataclass(frozen=True)
@@ -77,6 +78,25 @@ class FleetConfig:
     # (nothing ever reaches the fleet spillover queue)
     placement: str = "auto"      # "auto" | "devices" | "host"
     fuse_ticks: bool = True      # one kernel dispatch per device group/tick
+    snapshot_every: int | None = None   # crash-failover checkpoint cadence
+    # in fleet ticks (None = failover disabled: no snapshots, no sample
+    # journal, ``crash_shard`` refuses).  Every ``snapshot_every`` ticks
+    # each live stream is wire-encoded (``fleet/wire.py``) into the
+    # snapshot store; samples fed since a stream's last stored snapshot
+    # are journaled, so snapshot + journal replay reconstructs the stream
+    # bit-exactly on a replacement shard
+
+
+@dataclasses.dataclass
+class _JournalEntry:
+    """Replay journal of one failover-protected stream: every sample
+    chunk fed since the stream's last *stored* snapshot (cleared only on
+    a successful store, so a dropped/duplicated snapshot just deepens the
+    replay), plus the attach-time facts a zero-state recovery needs when
+    no snapshot was ever stored."""
+    total: int | None
+    record_trajectory: bool
+    chunks: list = dataclasses.field(default_factory=list)
 
 
 @dataclasses.dataclass
@@ -99,11 +119,17 @@ class FleetEngine:
     def __init__(self, params_or_qp, config: FleetConfig | None = None,
                  *, quant: q.QuantConfig | None = None,
                  act_scales: dict[str, float] | None = None,
-                 naive_acts: bool = False):
+                 naive_acts: bool = False,
+                 faults: FaultInjector | None = None):
         config = config or FleetConfig()
         if config.shards < 1:
             raise ValueError("shards must be >= 1")
+        if config.snapshot_every is not None and config.snapshot_every < 1:
+            raise ValueError("snapshot_every must be >= 1 (or None)")
         self.config = config
+        self._act_scales = act_scales     # kept to rebuild a crashed shard
+        self._naive_acts = naive_acts
+        self._faults = faults
         self.qp = coerce_qp(params_or_qp, quant)
         devices = placement.shard_devices(
             config.shards, config.placement, config.stream.backend)
@@ -136,6 +162,22 @@ class FleetEngine:
         self._ticks = 0
         self._global_spills = 0
         self._migrations = 0
+        # --- crash failover (active when config.snapshot_every is set) --
+        self._snapshots: dict[str, bytes] = {}   # stream -> last stored blob
+        self._journal: dict[str, _JournalEntry] = {}   # live streams only
+        self._cursor: dict[str, int] = {}  # stream -> last delivered step
+        self._failovers = 0
+        self._replayed_samples = 0
+        self._snapshots_taken = 0
+        self._snapshots_dropped = 0
+        self._snapshots_duplicated = 0
+        # monotonic counters of crashed shards, folded in so fleet totals
+        # stay conserved across a shard rebuild (stats()["retired"])
+        self._retired = {"stream_steps": 0, "completed": 0,
+                         "ring_spills": 0, "replay_suppressed": 0}
+        self._retired_sched = {k: 0 for k in (
+            "admissions", "recycles", "spills", "completed", "cancelled",
+            "evictions", "ticks")}
         # --- fused-tick fast path (single device group) ----------------
         # One (sum S_i, ...) buffer per kernel operand, with each shard's
         # segment handed out as a view: shards write their gathered
@@ -161,12 +203,13 @@ class FleetEngine:
     @classmethod
     def from_artifact(cls, artifact, config: FleetConfig | None = None, *,
                       quantized_acts: bool = False,
-                      naive_acts: bool = False) -> "FleetEngine":
+                      naive_acts: bool = False,
+                      faults: FaultInjector | None = None) -> "FleetEngine":
         """Build the fleet from a compression-pipeline artifact — the same
         contract as :meth:`StreamingEngine.from_artifact`."""
         return cls(artifact, config,
                    act_scales=artifact.runtime_scales(quantized_acts),
-                   naive_acts=naive_acts)
+                   naive_acts=naive_acts, faults=faults)
 
     # ------------------------------------------------------------------
     # Session lifecycle (StreamingEngine-shaped)
@@ -181,17 +224,24 @@ class FleetEngine:
         self._reclaim(stream_id)
         if stream_id in self._owner or stream_id in self._spilled:
             raise ValueError(f"stream {stream_id!r} already attached")
+        coerced = (None if samples is None
+                   else self._check_samples(stream_id, samples))
+        if self.config.snapshot_every is not None:
+            self._drop_failover_state(stream_id)   # reused finished id
+            self._journal[stream_id] = _JournalEntry(
+                total=total_steps, record_trajectory=record_trajectory,
+                chunks=[] if coerced is None else [coerced])
         dst = self._pick_shard(stream_id)
         if dst is None:
             entry = _SpillEntry(chunks=[], total=total_steps,
                                 record_trajectory=record_trajectory)
-            if samples is not None:
-                entry.chunks.append(self._check_samples(stream_id, samples))
+            if coerced is not None:
+                entry.chunks.append(coerced)
             self._spilled[stream_id] = entry
             self._global_spills += 1
             return "spilled"
         status = self.shards[dst].attach(
-            stream_id, samples, total_steps=total_steps,
+            stream_id, coerced, total_steps=total_steps,
             record_trajectory=record_trajectory)
         self._owner[stream_id] = dst
         return status
@@ -201,11 +251,14 @@ class FleetEngine:
         shard-pending, or fleet-spilled)."""
         shard = self._owner.get(stream_id)
         if shard is not None and stream_id in self.shards[shard]._sessions:
-            self.shards[shard].feed(stream_id, samples)
+            coerced = self._check_samples(stream_id, samples)
+            self._journal_feed(stream_id, coerced)
+            self.shards[shard].feed(stream_id, coerced)
             return
         if stream_id in self._spilled:
-            self._spilled[stream_id].chunks.append(
-                self._check_samples(stream_id, samples))
+            coerced = self._check_samples(stream_id, samples)
+            self._journal_feed(stream_id, coerced)
+            self._spilled[stream_id].chunks.append(coerced)
             return
         raise KeyError(f"stream {stream_id!r} is not attached")
 
@@ -216,9 +269,11 @@ class FleetEngine:
         if shard is not None and stream_id in self.shards[shard]._sessions:
             ev = self.shards[shard].detach(stream_id)
             del self._owner[stream_id]
+            self._drop_failover_state(stream_id)
             return ev
         if stream_id in self._spilled:
             del self._spilled[stream_id]
+            self._drop_failover_state(stream_id)
             return None
         self._owner.pop(stream_id, None)      # already finished: stale owner
         raise KeyError(f"stream {stream_id!r} is not attached")
@@ -239,18 +294,32 @@ class FleetEngine:
         """One fleet tick: drain the spillover queue into shards with
         room, then advance every shard — fused (one kernel dispatch per
         device group) or independently per shard.  Events are returned in
-        shard order; per-stream ordering matches the single engine."""
-        self._flush_spill()
+        shard order; per-stream ordering matches the single engine.
+
+        With failover enabled (``snapshot_every``), the tick additionally
+        checkpoints every live stream on cadence and polls the fault
+        injector at each phase boundary (``faults.PHASES``): before any
+        work, between the fused dispatch's two halves, and after events
+        were handed to the consumer."""
         self._ticks += 1
+        self._fire("pre_tick")
+        se = self.config.snapshot_every
+        if se is not None and self._ticks % se == 0:
+            self.snapshot_now()
+        self._flush_spill()
         live = self.n_active + self.n_pending
         if len(self._owner) > 2 * live + 1024:
             self._compact_owners()       # bound stale finished-id entries
         if not self.config.fuse_ticks:
+            self._fire("mid_dispatch")
             events: list[StreamEvent] = []
             for shard in self.shards:
                 events.extend(shard.step())
-            return events
-        return self._step_fused()
+        else:
+            events = self._step_fused()
+        self._deliver(events)
+        self._fire("post_emit")
+        return events
 
     def _step_fused(self) -> list[StreamEvent]:
         # phase 1: every shard runs admission + ring gather (no kernel)
@@ -260,6 +329,10 @@ class FleetEngine:
             handle = (shard._advance_begin(resident)
                       if resident is not None else None)
             begun.append((resident, handle))
+        # a shard crashed between the tick's two halves never reaches the
+        # kernel: its gathered handle points at the dead engine's arrays
+        for i in self._fire("mid_dispatch"):
+            begun[i] = (None, None)
         # phase 2: one batched kernel dispatch per device group
         h_out: dict[int, np.ndarray] = {}
         if self._x_big is not None:
@@ -342,10 +415,14 @@ class FleetEngine:
         streams stay attached, exactly like the single engine."""
         events: list[StreamEvent] = []
         while self._any_buffered():
-            before = self._stream_steps()
+            # a failover counts as progress: the crash tick itself advances
+            # no stream, but recovery re-queued work that the next ticks
+            # will replay — without this a crash mid-drain looks like a
+            # stall and drain returns early
+            before = (self._stream_steps(), self._failovers)
             out = self.step()
             events.extend(out)
-            if not out and self._stream_steps() == before:
+            if not out and (self._stream_steps(), self._failovers) == before:
                 break    # only unplaceable/pending streams hold samples
         return events
 
@@ -380,7 +457,11 @@ class FleetEngine:
         state = self.shards[src].export_stream(stream_id)
         self._owner[stream_id] = dst
         self._migrations += 1
-        return self.shards[dst].import_stream(state)
+        # carry the delivered-step watermark: a stream migrated while
+        # replaying a crash recovery must keep suppressing already-seen
+        # events on its new shard
+        return self.shards[dst].import_stream(
+            state, suppress_steps_until=self._cursor.get(stream_id))
 
     def decommission(self, shard: int) -> list[str]:
         """Drain shard ``shard``: remove it from routing and migrate every
@@ -401,7 +482,8 @@ class FleetEngine:
             dst = routing.route(sid, self.shard_keys, self._routable)
             self._owner[sid] = dst
             self._migrations += 1
-            self.shards[dst].import_stream(state)
+            self.shards[dst].import_stream(
+                state, suppress_steps_until=self._cursor.get(sid))
         return moved
 
     def recommission(self, shard: int) -> None:
@@ -411,6 +493,147 @@ class FleetEngine:
         if not (0 <= shard < len(self.shards)):
             raise ValueError(f"no such shard: {shard}")
         self._routable[shard] = True
+
+    # ------------------------------------------------------------------
+    # Crash failover (snapshot + journal replay; see fleet/wire.py)
+    # ------------------------------------------------------------------
+    def snapshot_now(self) -> int:
+        """Checkpoint every live shard-held stream: wire-encode a
+        non-destructive :meth:`StreamingEngine.snapshot_stream` of each
+        and store the blob (through the fault injector's snapshot filter,
+        which may drop/duplicate/corrupt it).  A stream's replay journal
+        is trimmed only when its snapshot is actually stored.  Returns
+        the number of snapshots stored."""
+        if self.config.snapshot_every is None:
+            raise ValueError(
+                "failover is disabled; construct the fleet with "
+                "FleetConfig(snapshot_every=N) to enable snapshots")
+        stored = 0
+        for i, shard in enumerate(self.shards):
+            for sid in list(shard._sessions):
+                blob = wire.encode_stream_state(shard.snapshot_stream(sid))
+                self._snapshots_taken += 1
+                out = (self._faults.filter_snapshot(i, sid, blob)
+                       if self._faults is not None else (blob,))
+                if not out:
+                    self._snapshots_dropped += 1
+                    continue
+                self._snapshots_duplicated += len(out) - 1
+                self._snapshots[sid] = out[-1]   # idempotent: last write wins
+                ent = self._journal.get(sid)
+                if ent is not None:
+                    ent.chunks.clear()
+                stored += 1
+        return stored
+
+    def crash_shard(self, shard: int, *, phase: str | None = None
+                    ) -> dict[str, Any]:
+        """Crash-fail shard ``shard``: its engine is dropped on the floor
+        (no export, no drain — everything resident dies with it) and a
+        fresh engine takes its place; every stream the fleet owned there
+        is reconstructed from its last stored snapshot plus journal
+        replay, with the replay cursor suppressing re-emission of events
+        the consumer already saw.  Under the exact backend every
+        recovered stream's subsequent output is bit-identical to an
+        uninterrupted run (gated in ``tests/test_failover.py``).
+
+        Returns a recovery report: streams recovered, samples queued for
+        replay, wire bytes decoded."""
+        if self.config.snapshot_every is None:
+            raise ValueError(
+                "failover is disabled; construct the fleet with "
+                "FleetConfig(snapshot_every=N) before crashing shards")
+        if not (0 <= shard < len(self.shards)):
+            raise ValueError(f"no such shard: {shard}")
+        old = self.shards[shard]
+        self._retire(old.stats())
+        victims = [sid for sid, o in self._owner.items()
+                   if o == shard and sid in self._journal]
+        new = StreamingEngine(self.qp, old.config,
+                              act_scales=self._act_scales,
+                              naive_acts=self._naive_acts)
+        self.shards[shard] = new
+        if self._x_big is not None:   # rewire the fused-x view segment
+            new._x = self._x_big[self._offsets[shard]:
+                                 self._offsets[shard + 1]]
+        self._h_big = None            # fused-h adoption restarts from concat
+        self._h_views = [None] * len(self.shards)
+        replayed = 0
+        wire_bytes = 0
+        d = new.kernel.input_dim
+        for sid in victims:
+            ent = self._journal[sid]
+            blob = self._snapshots.get(sid)
+            if blob is not None:
+                state = wire.decode_stream_state(blob)
+                wire_bytes += len(blob)
+            else:   # never checkpointed: journal holds its whole history
+                state = StreamState(
+                    stream_id=sid,
+                    h=np.zeros(new.kernel.hidden_dim, np.float32),
+                    steps=0, wstep=0, total=ent.total,
+                    samples=np.zeros((0, d), np.float32),
+                    record_trajectory=ent.record_trajectory)
+            replayed += len(state.samples)
+            new.import_stream(
+                state, suppress_steps_until=self._cursor.get(sid))
+            for chunk in ent.chunks:
+                new.feed(sid, chunk)
+                replayed += len(chunk)
+        self._failovers += 1
+        self._replayed_samples += replayed
+        return {"shard": shard, "phase": phase,
+                "streams_recovered": len(victims),
+                "replayed_samples": replayed, "wire_bytes": wire_bytes}
+
+    def _fire(self, phase: str) -> list[int]:
+        """Poll the fault injector at a tick phase; crash-fail whatever
+        shards it names.  Returns the crashed shard indices."""
+        if self._faults is None:
+            return []
+        crashed = []
+        for s in self._faults.crashes(self, phase, self._ticks):
+            self.crash_shard(int(s), phase=phase)
+            crashed.append(int(s))
+        return crashed
+
+    def _deliver(self, events: list) -> None:
+        """Record what the consumer has now seen: per-stream delivered-step
+        watermarks (the replay cursor crash recovery suppresses up to) and
+        final-event cleanup of failover state."""
+        if self.config.snapshot_every is None:
+            return
+        for e in events:
+            if isinstance(e, StreamEventBatch):
+                for sid, st, fin in zip(e.stream_ids, e.steps, e.final):
+                    self._note_delivery(sid, int(st), bool(fin))
+            else:
+                self._note_delivery(e.stream_id, e.step, e.kind == "final")
+
+    def _note_delivery(self, sid: str, step: int, final: bool) -> None:
+        if final:   # stream completed: nothing left to protect
+            self._drop_failover_state(sid)
+        elif step > self._cursor.get(sid, -1):
+            self._cursor[sid] = step
+
+    def _journal_feed(self, sid: str, coerced: np.ndarray) -> None:
+        ent = self._journal.get(sid)
+        if ent is not None and len(coerced):
+            ent.chunks.append(coerced)
+
+    def _drop_failover_state(self, sid: str) -> None:
+        self._journal.pop(sid, None)
+        self._snapshots.pop(sid, None)
+        self._cursor.pop(sid, None)
+
+    def _retire(self, st: dict) -> None:
+        """Fold a crashed shard's monotonic counters into the retired
+        accumulators so fleet totals stay conserved across the rebuild."""
+        for k in self._retired:
+            self._retired[k] += st[k]
+        sc = st["scheduler"]
+        for k in self._retired_sched:
+            self._retired_sched[k] += sc[k]
 
     def shard_of(self, stream_id: str) -> int:
         """Current shard of a stream, or -1 while fleet-spilled."""
@@ -467,25 +690,48 @@ class FleetEngine:
             "active": tot("active"),
             "pending": tot("pending"),
             "spilled": len(self._spilled),
-            "completed": tot("completed"),
-            "stream_steps": tot("stream_steps"),
-            "ring_spills": tot("ring_spills"),
+            # monotonic workload counters include crashed shards' retired
+            # totals, so conservation (fleet total == sum(per_shard) +
+            # retired) holds under crash/recover lifecycles
+            "completed": tot("completed") + self._retired["completed"],
+            "stream_steps": (tot("stream_steps")
+                             + self._retired["stream_steps"]),
+            "ring_spills": tot("ring_spills") + self._retired["ring_spills"],
+            "replay_suppressed": (tot("replay_suppressed")
+                                  + self._retired["replay_suppressed"]),
             "ticks": self._ticks,
             "global_spills": self._global_spills,
             "migrations": self._migrations,
+            "failover_enabled": self.config.snapshot_every is not None,
+            "failovers": self._failovers,
+            "replayed_samples": self._replayed_samples,
+            "snapshots": {
+                "taken": self._snapshots_taken,
+                "dropped": self._snapshots_dropped,
+                "duplicated": self._snapshots_duplicated,
+                "protected_streams": len(self._snapshots),
+                "journal_streams": len(self._journal),
+            },
+            "retired": {**self._retired,
+                        "scheduler": dict(self._retired_sched)},
             "scheduler": {
                 "max_slots": slots,
                 "active": sched_tot("active"),
                 "pending": sched_tot("pending"),
                 "occupancy": (sched_tot("active") / slots) if slots else 0.0,
                 "peak_active": sched_tot("peak_active"),
-                "admissions": sched_tot("admissions"),
-                "recycles": sched_tot("recycles"),
-                "spills": sched_tot("spills"),
-                "completed": sched_tot("completed"),
-                "cancelled": sched_tot("cancelled"),
-                "evictions": sched_tot("evictions"),
-                "ticks": sched_tot("ticks"),
+                "admissions": (sched_tot("admissions")
+                               + self._retired_sched["admissions"]),
+                "recycles": (sched_tot("recycles")
+                             + self._retired_sched["recycles"]),
+                "spills": sched_tot("spills") + self._retired_sched["spills"],
+                "completed": (sched_tot("completed")
+                              + self._retired_sched["completed"]),
+                "cancelled": (sched_tot("cancelled")
+                              + self._retired_sched["cancelled"]),
+                "evictions": (sched_tot("evictions")
+                              + self._retired_sched["evictions"]),
+                "ticks": sched_tot("ticks") + self._retired_sched["ticks"],
             },
             "per_shard": per_shard,
         }
@@ -558,7 +804,10 @@ class FleetEngine:
             del self._owner[stream_id]
 
     def _stream_steps(self) -> int:
-        return sum(s._stream_steps for s in self.shards)
+        # retired steps keep this monotonic across a crash-rebuild, which
+        # drain()'s progress detection relies on
+        return (sum(s._stream_steps for s in self.shards)
+                + self._retired["stream_steps"])
 
     def _any_buffered(self) -> bool:
         if any(s._any_buffered() for s in self.shards):

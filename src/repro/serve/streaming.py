@@ -156,7 +156,10 @@ class _Session:
     chunks: collections.deque = dataclasses.field(
         default_factory=collections.deque)   # buffered while pending
     record_trajectory: bool = False
-    restore: tuple | None = None         # (h, steps, wstep) migrated-in state
+    restore: tuple | None = None         # (h, steps, wstep, suppress)
+    # migrated-in state; ``suppress`` is the replay cursor — events up to
+    # and including that step were already delivered upstream and are
+    # swallowed when the stream re-runs them after a crash recovery
 
 
 def coerce_samples(samples, input_dim: int, stream_id: str) -> np.ndarray:
@@ -223,6 +226,10 @@ class StreamingEngine:
         self._spill: dict[int, collections.deque] = {}  # slot -> chunk queue
         self._tap = np.zeros(S, bool)            # trajectory-tap flag
         self._n_taps = 0                         # fast skip of the tap scan
+        self._suppress = np.full(S, -1, np.int64)  # replay cursor: events at
+        # steps <= this were already delivered before a crash; re-emissions
+        # during replay are swallowed (state transitions still happen, so
+        # the recovered trajectory stays bit-identical)
         # --- placement: delegated to the shared slot scheduler ---------
         self._sched = SlotScheduler(S, HostProgram(self))
         self._sessions: dict[str, _Session] = {}
@@ -230,6 +237,7 @@ class StreamingEngine:
         # telemetry (workload side; placement counters live in the scheduler)
         self._stream_steps = 0
         self._ring_spills = 0
+        self._replay_suppressed = 0   # events swallowed by the replay cursor
 
     @classmethod
     def from_artifact(cls, artifact: ModelArtifact,
@@ -296,14 +304,15 @@ class StreamingEngine:
     # ------------------------------------------------------------------
     # Live migration (fleet rebalancing / shard drain)
     # ------------------------------------------------------------------
-    def export_stream(self, stream_id: str) -> StreamState:
-        """Detach a stream into a portable :class:`StreamState` snapshot:
+    def snapshot_stream(self, stream_id: str) -> StreamState:
+        """Copy a live stream into a portable :class:`StreamState` —
         hidden state, step/window counters, every buffered-but-unconsumed
-        sample (ring + spill backlog, FIFO order preserved), and the
-        trajectory tap.  No event is emitted and the departure is counted
-        as a scheduler *eviction*, not a cancellation.  Re-attaching the
-        snapshot via :meth:`import_stream` on any engine built from the
-        same weights continues the stream bit-identically (exact backend)."""
+        sample (ring + spill backlog, FIFO order preserved), and a copy of
+        the trajectory tap — *without* detaching it.  This is the fleet's
+        periodic-checkpoint primitive: the stream keeps running, and the
+        snapshot (wire-encoded via ``serve/fleet/wire.py``) plus the
+        samples fed after it deterministically reproduce the stream's
+        future on a replacement shard."""
         if stream_id not in self._sessions:
             raise KeyError(f"stream {stream_id!r} is not attached")
         s = self._sessions[stream_id]
@@ -314,7 +323,7 @@ class StreamingEngine:
             idx = (self._head[slot] + np.arange(n)) % self._cap
             parts = [self._ring[idx, slot]] if n else []
             parts += list(self._spill.get(slot, ()))
-            state = StreamState(
+            return StreamState(
                 stream_id=stream_id,
                 h=self._h[slot].copy(),
                 steps=int(self._steps[slot]),
@@ -323,41 +332,61 @@ class StreamingEngine:
                 samples=(np.concatenate(parts) if parts
                          else np.zeros((0, d), np.float32)),
                 record_trajectory=s.record_trajectory,
-                trajectory=self._trajectories.pop(stream_id, []))
+                trajectory=list(self._trajectories.get(stream_id, ())))
+        # pending: never stepped HERE — but a migrated-in stream that
+        # is still waiting for a slot carries its restored hidden
+        # state/counters on the session; those must travel onward, or
+        # a second migration would silently rewind the stream to zero
+        if s.restore is not None:
+            h0, steps0, wstep0 = s.restore[:3]
+            h0 = h0.copy()
         else:
-            # pending: never stepped HERE — but a migrated-in stream that
-            # is still waiting for a slot carries its restored hidden
-            # state/counters on the session; those must travel onward, or
-            # a second migration would silently rewind the stream to zero
-            if s.restore is not None:
-                h0, steps0, wstep0 = s.restore
-            else:
-                h0 = np.zeros(self.kernel.hidden_dim, np.float32)
-                steps0 = wstep0 = 0
-            parts = list(s.chunks)
-            state = StreamState(
-                stream_id=stream_id,
-                h=h0, steps=steps0, wstep=wstep0, total=s.total,
-                samples=(np.concatenate(parts) if parts
-                         else np.zeros((0, d), np.float32)),
-                record_trajectory=s.record_trajectory,
-                trajectory=self._trajectories.pop(stream_id, []))
+            h0 = np.zeros(self.kernel.hidden_dim, np.float32)
+            steps0 = wstep0 = 0
+        parts = list(s.chunks)
+        return StreamState(
+            stream_id=stream_id,
+            h=h0, steps=steps0, wstep=wstep0, total=s.total,
+            samples=(np.concatenate(parts) if parts
+                     else np.zeros((0, d), np.float32)),
+            record_trajectory=s.record_trajectory,
+            trajectory=list(self._trajectories.get(stream_id, ())))
+
+    def export_stream(self, stream_id: str) -> StreamState:
+        """Detach a stream into a portable :class:`StreamState` snapshot
+        (see :meth:`snapshot_stream` for what travels).  No event is
+        emitted and the departure is counted as a scheduler *eviction*,
+        not a cancellation.  Re-attaching the snapshot via
+        :meth:`import_stream` on any engine built from the same weights
+        continues the stream bit-identically (exact backend)."""
+        state = self.snapshot_stream(stream_id)
+        self._trajectories.pop(stream_id, None)
         self._sched.evict(stream_id)          # resident path pops session
         self._sessions.pop(stream_id, None)   # pending path
         return state
 
-    def import_stream(self, state: StreamState) -> str:
+    def import_stream(self, state: StreamState, *,
+                      suppress_steps_until: int | None = None) -> str:
         """Re-attach a migrated stream from a :class:`StreamState`.
         Returns ``"active"``/``"pending"`` like :meth:`attach`.  The
         snapshot's hidden state and counters are restored into the slot at
         admission time, so a stream that waits in the pending queue first
-        still resumes exactly where it left off."""
+        still resumes exactly where it left off.
+
+        ``suppress_steps_until``: replay cursor for crash failover — the
+        consumer already saw this stream's events up to and including
+        that step, so re-emissions at steps <= it are swallowed (counted
+        in ``stats()["replay_suppressed"]``) while the state transitions
+        they mark (window reset, completion) still run, keeping the
+        recovered trajectory bit-identical to the uninterrupted one."""
         if state.stream_id in self._sessions:
             raise ValueError(f"stream {state.stream_id!r} already attached")
         s = _Session(stream_id=state.stream_id, total=state.total,
                      record_trajectory=state.record_trajectory,
                      restore=(np.asarray(state.h, np.float32).copy(),
-                              int(state.steps), int(state.wstep)))
+                              int(state.steps), int(state.wstep),
+                              -1 if suppress_steps_until is None
+                              else int(suppress_steps_until)))
         self._sessions[state.stream_id] = s
         if state.record_trajectory:
             self._trajectories[state.stream_id] = list(state.trajectory)
@@ -416,13 +445,15 @@ class StreamingEngine:
         self._tail[slot] = 0
         self._tap[slot] = s.record_trajectory
         self._n_taps += int(s.record_trajectory)
+        self._suppress[slot] = -1
         if s.restore is not None:     # migrated-in stream: resume, don't reset
-            h0, steps0, wstep0 = s.restore
+            h0, steps0, wstep0, suppress0 = s.restore
             if not self._h.flags.writeable:   # jit/pallas outputs are
                 self._h = self._h.copy()      # read-only numpy views
             self._h[slot] = h0
             self._steps[slot] = steps0
             self._wstep[slot] = wstep0
+            self._suppress[slot] = suppress0
             s.restore = None
         while s.chunks:
             self._ring_write(slot, s.chunks.popleft())
@@ -493,16 +524,24 @@ class StreamingEngine:
         events: list[StreamEvent] = []
         finished_rows: list[int] = []
         if emit_rows.size:               # rare tick: something emits
-            logits = self.kernel.head_logits(self._h[emit_rows])
-            if self.config.batch_events:
-                events.append(self._event_batch(emit_rows, at_window,
-                                                logits))
-            else:
-                for i, slot in enumerate(emit_rows):
-                    kind = "window" if at_window[slot] else "final"
-                    events.append(self._event(
-                        self._sched.request_at(int(slot)), int(slot), kind,
-                        int(self._wstep[slot]), logits[i]))
+            # replay cursor: events the consumer already saw before a
+            # crash are swallowed; window-reset/finish bookkeeping below
+            # still uses the full emit set, so the recovered state
+            # transitions are identical to the uninterrupted run
+            deliver = emit_rows[
+                self._steps[emit_rows] > self._suppress[emit_rows]]
+            self._replay_suppressed += int(emit_rows.size - deliver.size)
+            if deliver.size:
+                logits = self.kernel.head_logits(self._h[deliver])
+                if self.config.batch_events:
+                    events.append(self._event_batch(deliver, at_window,
+                                                    logits))
+                else:
+                    for i, slot in enumerate(deliver):
+                        kind = "window" if at_window[slot] else "final"
+                        events.append(self._event(
+                            self._sched.request_at(int(slot)), int(slot),
+                            kind, int(self._wstep[slot]), logits[i]))
             finished_rows = np.nonzero(finished)[0].tolist()
             if np.any(at_window):
                 self._wstep[at_window] = 0
@@ -515,10 +554,13 @@ class StreamingEngine:
                       reason: str) -> StreamEvent | None:
         ev = None
         if reason == "cancelled" and self._wstep[slot] > 0:
-            # detach mid-window: emit the partial-window prediction
-            logits = self.kernel.head_logits(self._h[slot:slot + 1])[0]
-            ev = self._event(stream_id, slot, "final",
-                             int(self._wstep[slot]), logits)
+            if self._steps[slot] > self._suppress[slot]:
+                # detach mid-window: emit the partial-window prediction
+                logits = self.kernel.head_logits(self._h[slot:slot + 1])[0]
+                ev = self._event(stream_id, slot, "final",
+                                 int(self._wstep[slot]), logits)
+            else:
+                self._replay_suppressed += 1
         s = self._sessions.pop(stream_id, None)
         if s is not None:
             s.slot = -1
@@ -646,6 +688,7 @@ class StreamingEngine:
             "completed": sched["completed"] + sched["cancelled"],
             "ring_capacity": self._cap,
             "ring_spills": self._ring_spills,
+            "replay_suppressed": self._replay_suppressed,
             # scheduler counters (admissions/recycles/spills/occupancy):
             # the observability surface the sharded-streaming work needs
             "scheduler": sched,

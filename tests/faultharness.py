@@ -1,0 +1,110 @@
+"""Shared fault-injection harness for the fleet failover tests.
+
+Not a test module — imported by ``tests/test_failover.py`` and
+``tests/test_fleet_properties.py``.  The harness's one idea: because the
+exact backend is bit-deterministic, "recovered correctly" is assertable
+as *byte equality of the full per-stream event history* against an
+uninterrupted single-engine reference — no tolerances, no sampling.
+Every helper here therefore folds events (single or columnar) into
+per-stream ordered logs whose entries include the raw logits bytes.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.serve.streaming import (StreamEventBatch, StreamingConfig,
+                                   StreamingEngine)
+from repro.serve.fleet import FleetConfig, FleetEngine
+
+
+def collect_log(events, log=None) -> dict:
+    """Fold a list of StreamEvent / StreamEventBatch into per-stream
+    ordered histories.  Entries carry every event field, with logits as
+    raw bytes so comparison is bit-exact, not approximate."""
+    log = {} if log is None else log
+    for e in events:
+        if isinstance(e, StreamEventBatch):
+            for sid, fin, st, ws, p, lg, w in zip(
+                    e.stream_ids, e.final, e.steps, e.window_steps,
+                    e.predictions, e.logits, e.warm):
+                log.setdefault(sid, []).append(
+                    ("final" if fin else "window", int(st), int(ws),
+                     int(p), np.asarray(lg, np.float32).tobytes(), bool(w)))
+        else:
+            log.setdefault(e.stream_id, []).append(
+                (e.kind, int(e.step), int(e.window_step),
+                 int(e.prediction),
+                 np.asarray(e.logits, np.float32).tobytes(), bool(e.warm)))
+    return log
+
+
+def make_streams(n: int, steps: int, input_dim: int, seed: int = 0) -> dict:
+    """Deterministic per-stream sample tensors: ``{id: (steps, d)}``."""
+    rng = np.random.default_rng(seed)
+    return {f"st{i:03d}": rng.standard_normal(
+        (steps, input_dim)).astype(np.float32) for i in range(n)}
+
+
+def reference_log(qp, streams: dict, *, window: int = 128) -> dict:
+    """Uninterrupted single-engine run of every stream to completion —
+    the byte-level ground truth all fault schedules must reproduce."""
+    eng = StreamingEngine(qp, StreamingConfig(
+        max_slots=max(len(streams), 1), window=window))
+    for sid, w in streams.items():
+        eng.attach(sid, w, total_steps=len(w))
+    return collect_log(eng.drain())
+
+
+def run_crash_schedule(qp, streams: dict, *, shards: int,
+                       slots_per_shard: int, injector,
+                       snapshot_every: int = 64, window: int = 128,
+                       batch_events: bool = False) -> tuple[dict, dict]:
+    """Drive every stream through a failover-enabled fleet under the
+    given fault injector, to completion.  Returns ``(event_log, stats)``."""
+    fleet = FleetEngine(qp, FleetConfig(
+        shards=shards,
+        stream=StreamingConfig(max_slots=slots_per_shard, window=window,
+                               batch_events=batch_events),
+        snapshot_every=snapshot_every), faults=injector)
+    log: dict = {}
+    for sid, w in streams.items():
+        fleet.attach(sid, w, total_steps=len(w))
+    collect_log(fleet.drain(), log)
+    return log, fleet.stats()
+
+
+def assert_logs_identical(got: dict, want: dict) -> None:
+    """Byte-identical per-stream event histories, with a readable diff on
+    the first divergence."""
+    assert set(got) == set(want), (
+        f"stream set differs: extra={sorted(set(got) - set(want))}, "
+        f"missing={sorted(set(want) - set(got))}")
+    for sid in sorted(want):
+        g, w = got[sid], want[sid]
+        assert g == w, (
+            f"stream {sid!r}: event history diverges "
+            f"(got {len(g)} events, want {len(w)}); first difference at "
+            f"index {next(i for i in range(min(len(g), len(w)) + 1) if i >= len(g) or i >= len(w) or g[i] != w[i])}")
+
+
+def assert_counters_conserved(stats: dict) -> None:
+    """Fleet counter-conservation invariant: every monotonic fleet total
+    equals the sum over live shards plus the retired accumulator of
+    crashed shards — no counts lost or double-counted by failovers."""
+    per = stats["per_shard"]
+    retired = stats["retired"]
+    for key in ("completed", "stream_steps", "ring_spills",
+                "replay_suppressed"):
+        assert stats[key] == sum(p[key] for p in per) + retired[key], (
+            f"{key}: fleet total {stats[key]} != live "
+            f"{sum(p[key] for p in per)} + retired {retired[key]}")
+    rsched = retired["scheduler"]
+    for key in ("admissions", "recycles", "spills", "completed",
+                "cancelled", "evictions", "ticks"):
+        live = sum(p["scheduler"][key] for p in per)
+        assert stats["scheduler"][key] == live + rsched[key], (
+            f"scheduler.{key}: fleet total {stats['scheduler'][key]} != "
+            f"live {live} + retired {rsched[key]}")
+    # gauges stay live-only
+    for key in ("active", "pending"):
+        assert stats[key] == sum(p[key] for p in per)

@@ -1,0 +1,165 @@
+"""Hypothesis property tests for the fleet: HRW routing stability, wire
+round-trip fuzzing, and randomized crash/recover/migrate lifecycles.
+
+Skipped when hypothesis is not installed (the CI tests job installs it);
+the deterministic gates live in ``tests/test_fleet.py``,
+``tests/test_wire.py`` and ``tests/test_failover.py``.
+"""
+import jax
+import numpy as np
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st
+
+from faultharness import (assert_counters_conserved, assert_logs_identical,
+                          collect_log, make_streams, reference_log)
+from repro.core import fastgrnn as fg
+from repro.core.quantization import QuantConfig, quantize_params
+from repro.serve.fleet import (PHASES, FleetConfig, FleetEngine,
+                               ScheduledFaults, route)
+from repro.serve.fleet.wire import decode_stream_state, encode_stream_state
+from repro.serve.streaming import (StreamState, StreamingConfig,
+                                   StreamingEngine)
+
+_settings = settings(max_examples=25, deadline=None)
+_ids = st.sets(st.text(st.characters(min_codepoint=33, max_codepoint=126),
+                       min_size=1, max_size=12), min_size=1, max_size=50)
+
+
+@pytest.fixture(scope="module")
+def qp():
+    cfg = fg.FastGRNNConfig(rank_w=2, rank_u=8)
+    return quantize_params(fg.init_params(cfg, jax.random.PRNGKey(0)),
+                           QuantConfig())
+
+
+# ---------------------------------------------------------------------------
+# HRW routing: the stated invariant behind drain/decommission
+# ---------------------------------------------------------------------------
+
+@_settings
+@given(ids=_ids, n=st.integers(2, 9), removed=st.data())
+def test_hrw_removing_a_shard_remaps_only_its_streams(ids, n, removed):
+    """For any stream set: masking out one shard moves ONLY the streams
+    whose home was that shard; everyone else's route is unchanged."""
+    keys = [f"shard-{i}" for i in range(n)]
+    gone = removed.draw(st.integers(0, n - 1), label="removed shard")
+    home = {sid: route(sid, keys) for sid in ids}
+    eligible = [i != gone for i in range(n)]
+    for sid in ids:
+        new = route(sid, keys, eligible)
+        if home[sid] == gone:
+            assert new != gone
+        else:
+            assert new == home[sid], (
+                f"stream {sid!r} moved {home[sid]} -> {new} although its "
+                f"home shard was not the one removed ({gone})")
+
+
+@_settings
+@given(ids=_ids, n=st.integers(1, 8))
+def test_hrw_adding_a_shard_only_pulls_streams_to_it(ids, n):
+    """Growing the fleet by one shard never shuffles streams between the
+    existing shards — a stream either stays home or moves to the new
+    shard (the elastic scale-out half of the HRW invariant)."""
+    keys = [f"shard-{i}" for i in range(n)]
+    home = {sid: route(sid, keys) for sid in ids}
+    grown = keys + [f"shard-{n}"]
+    for sid in ids:
+        new = route(sid, grown)
+        assert new == home[sid] or new == n, (
+            f"stream {sid!r} moved {home[sid]} -> {new}, not to the "
+            f"added shard {n}")
+
+
+# ---------------------------------------------------------------------------
+# Wire format: round-trip fuzz
+# ---------------------------------------------------------------------------
+
+@_settings
+@given(seed=st.integers(0, 2**31 - 1),
+       sid=st.text(max_size=24),
+       k=st.integers(0, 9), t=st.integers(0, 5),
+       steps=st.integers(0, 10**9), wstep=st.integers(0, 127),
+       total=st.none() | st.integers(0, 10**9),
+       record=st.booleans())
+def test_wire_round_trip_fuzz(seed, sid, k, t, steps, wstep, total, record):
+    rng = np.random.default_rng(seed)
+    state = StreamState(
+        stream_id=sid,
+        h=rng.standard_normal(16).astype(np.float32),
+        steps=steps, wstep=wstep, total=total,
+        samples=rng.standard_normal((k, 3)).astype(np.float32),
+        record_trajectory=record,
+        trajectory=[rng.standard_normal(16).astype(np.float32)
+                    for _ in range(t)])
+    blob = encode_stream_state(state)
+    decoded = decode_stream_state(blob)
+    assert encode_stream_state(decoded) == blob
+    assert (decoded.stream_id, decoded.steps, decoded.wstep,
+            decoded.total, decoded.record_trajectory) == \
+           (sid, steps, wstep, total, record)
+    np.testing.assert_array_equal(decoded.h.view(np.int32),
+                                  state.h.view(np.int32))
+    np.testing.assert_array_equal(decoded.samples.view(np.int32),
+                                  state.samples.view(np.int32))
+
+
+# ---------------------------------------------------------------------------
+# Randomized crash/recover/migrate lifecycles
+# ---------------------------------------------------------------------------
+
+_lifecycle = settings(max_examples=12, deadline=None)
+_REF_CACHE: dict = {}   # qp-id -> uninterrupted reference log (built once)
+
+
+@_lifecycle
+@given(data=st.data())
+def test_random_crash_recover_migrate_lifecycle_is_bit_exact(qp, data):
+    """Any schedule of shard crashes (at any tick phase), live migrations
+    and checkpoint cadences yields per-stream event histories
+    byte-identical to the uninterrupted single-engine reference, with
+    fleet counters conserved (live + retired)."""
+    shards = data.draw(st.integers(2, 4), label="shards")
+    snapshot_every = data.draw(st.sampled_from([1, 16, 48]),
+                               label="snapshot_every")
+    crashes = data.draw(st.lists(
+        st.tuples(st.integers(1, 320), st.sampled_from(PHASES),
+                  st.integers(0, shards - 1)),
+        min_size=1, max_size=3), label="crashes")
+    migrates = data.draw(st.lists(
+        st.tuples(st.integers(1, 320), st.integers(0, 15)),
+        max_size=3), label="migrates")
+
+    streams = make_streams(16, 280, 3, seed=7)
+    want = _REF_CACHE.get(id(qp))
+    if want is None:
+        want = reference_log(qp, streams)
+        _REF_CACHE[id(qp)] = want
+
+    fleet = FleetEngine(qp, FleetConfig(
+        shards=shards, stream=StreamingConfig(max_slots=6),
+        snapshot_every=snapshot_every),
+        faults=ScheduledFaults(schedule=crashes))
+    sids = sorted(streams)
+    mig_at = {}
+    for tick, k in migrates:
+        mig_at.setdefault(tick, []).append(sids[k])
+    log = {}
+    for sid, w in streams.items():
+        fleet.attach(sid, w, total_steps=len(w))
+    for tick in range(1, 340):
+        for sid in mig_at.get(tick, ()):
+            shard = fleet._owner.get(sid)
+            if shard is not None and sid in fleet.shards[shard]._sessions:
+                try:
+                    fleet.migrate(sid)
+                except ValueError:
+                    pass   # no routable destination — legal no-op
+        collect_log(fleet.step(), log)
+    collect_log(fleet.drain(), log)
+    assert_logs_identical(log, want)
+    stats = fleet.stats()
+    assert_counters_conserved(stats)
+    assert stats["failovers"] == len(crashes)
