@@ -38,6 +38,7 @@ import numpy as np
 from repro.core import fastgrnn as fg
 from repro.core.quantization import quantize_params, QuantConfig
 from repro.data import hapt
+from repro.obs import MetricsRegistry, Observability
 from repro.serve.fleet import FleetConfig, FleetEngine
 from repro.serve.streaming import StreamingEngine, StreamingConfig
 
@@ -45,24 +46,27 @@ FULL = os.environ.get("REPRO_FULL", "0") == "1"
 CONCURRENCY = (256, 1024, 2048, 4096) if FULL else (256, 1024, 2048)
 
 
-def _make_engine(qp, n_streams: int, backend: str, shards: int):
+def _make_engine(qp, n_streams: int, backend: str, shards: int, obs=None):
     """--shards > 1 drives the identical protocol through the sharded
     fleet front door (serve/fleet) instead of one StreamingEngine — the
     slot budget is split across per-shard schedulers."""
     if shards <= 1:
         return StreamingEngine(
-            qp, StreamingConfig(max_slots=n_streams, backend=backend))
+            qp, StreamingConfig(max_slots=n_streams, backend=backend),
+            obs=obs)
     per_shard = max(1, n_streams // shards)
     return FleetEngine(qp, FleetConfig(
         shards=shards, max_pending_per_shard=0, placement="host",
-        stream=StreamingConfig(max_slots=per_shard, backend=backend)))
+        stream=StreamingConfig(max_slots=per_shard, backend=backend)),
+        obs=obs)
 
 
 def bench_backend(backend: str, windows: np.ndarray, n_windows: int,
-                  qp, concurrency=CONCURRENCY, shards: int = 1) -> list[dict]:
+                  qp, concurrency=CONCURRENCY, shards: int = 1,
+                  obs=None) -> list[dict]:
     rows = []
     for n_streams in concurrency:
-        eng = _make_engine(qp, n_streams, backend, shards)
+        eng = _make_engine(qp, n_streams, backend, shards, obs=obs)
         n_streams = (n_streams if shards <= 1
                      else shards * max(1, n_streams // shards))
         src = windows[np.arange(n_streams) % len(windows)]
@@ -114,9 +118,17 @@ def main() -> None:
     parser.add_argument("--shards", type=int, default=1,
                         help="> 1: drive the same protocol through the "
                              "sharded FleetEngine (serve/fleet)")
+    parser.add_argument("--metrics-out", default=None,
+                        help="also run with the repro.obs metrics registry "
+                             "attached and write its snapshot (schema "
+                             "'metrics_snapshot') to this path")
     args = parser.parse_args()
     concurrency = (tuple(int(c) for c in args.concurrency.split(","))
                    if args.concurrency else CONCURRENCY)
+    # metrics-only bundle: counters/gauges/histograms accumulate across
+    # every row; no tracer, so the measured path stays the NullTracer one
+    obs = (Observability(metrics=MetricsRegistry())
+           if args.metrics_out else None)
 
     cfg = fg.FastGRNNConfig(rank_w=2, rank_u=8)
     qp = quantize_params(fg.init_params(cfg, jax.random.PRNGKey(0)),
@@ -126,7 +138,11 @@ def main() -> None:
     rows = []
     for backend in args.backends.split(","):
         rows += bench_backend(backend.strip(), windows, args.windows, qp,
-                              concurrency, shards=args.shards)
+                              concurrency, shards=args.shards, obs=obs)
+    if args.metrics_out:
+        with open(args.metrics_out, "w") as f:
+            f.write(obs.metrics.dumps() + "\n")
+        print(f"wrote {args.metrics_out}")
 
     record = {
         "benchmark": "streaming_throughput",

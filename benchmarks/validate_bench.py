@@ -74,7 +74,62 @@ SCHEMAS: dict[str, dict] = {
         "size": ["bits", "weight_bytes_dense", "weight_bytes_packed",
                  "tensors", "passes"],
     },
+    # repro.obs.MetricsRegistry.snapshot(): the serving stack's metrics
+    # export (written by --metrics-out on streaming_throughput /
+    # fleet_bench / serve_demo).  Deep-checked by _check_metrics_snapshot
+    # below: log2 bucket ladder, bucket-count conservation, counter
+    # non-negativity.
+    "metrics_snapshot": {
+        "top": ["benchmark", "schema_version", "deterministic",
+                "counters", "gauges", "histograms"],
+    },
+    # benchmarks/obs_bench.py: telemetry overhead budgets + tick-phase
+    # breakdown + deadline-miss rate + flight-recorder byte stability.
+    "obs_overhead": {
+        "top": ["benchmark", "model", "backend", "window",
+                "sample_rate_hz", "host", "config", "baseline", "traced",
+                "budgets", "phases", "deadline", "flight_recorder"],
+        "baseline": ["concurrent_streams", "ticks",
+                     "stream_steps_per_sec", "p50_ms", "p99_ms"],
+        "traced": ["concurrent_streams", "ticks", "stream_steps_per_sec",
+                   "p50_ms", "p99_ms"],
+        "budgets": ["traced_overhead_pct", "traced_budget_pct",
+                    "traced_within_budget", "null_budget_pct"],
+        "deadline": ["deadline_ms", "concurrent_streams", "miss_ticks",
+                     "miss_stream_ticks", "stream_ticks", "miss_rate"],
+        "flight_recorder": ["shards", "crashes", "dump_bytes",
+                            "byte_stable"],
+    },
 }
+
+#: The canonical metrics-snapshot bucket ladder (mirrors
+#: repro.obs.metrics.BUCKET_EDGES_US; duplicated so this validator stays
+#: dependency-free, with tests/test_obs.py pinning the real one).
+_BUCKET_EDGES_US = [2 ** k for k in range(22)]
+
+
+def _check_metrics_snapshot(record: dict, path: str,
+                            errors: list[str]) -> None:
+    """Deep checks beyond key presence: the parts of the snapshot schema
+    a refactor could silently break without dropping a key."""
+    for name, v in record.get("counters", {}).items():
+        if not isinstance(v, int) or isinstance(v, bool) or v < 0:
+            errors.append(f"{path}: counter {name!r} must be a "
+                          f"non-negative int, got {v!r}")
+    for name, h in record.get("histograms", {}).items():
+        if not isinstance(h, dict):
+            errors.append(f"{path}: histogram {name!r} must be an object")
+            continue
+        if list(h.get("buckets_us", [])) != _BUCKET_EDGES_US:
+            errors.append(f"{path}: histogram {name!r} bucket ladder "
+                          f"differs from the canonical log2 edges")
+        counts = h.get("counts", [])
+        if len(counts) != len(_BUCKET_EDGES_US) + 1:
+            errors.append(f"{path}: histogram {name!r} counts length "
+                          f"{len(counts)} != {len(_BUCKET_EDGES_US) + 1}")
+        elif sum(counts) != h.get("count"):
+            errors.append(f"{path}: histogram {name!r} bucket counts sum "
+                          f"{sum(counts)} != count {h.get('count')}")
 
 
 def _walk_numbers(obj, path, errors):
@@ -107,7 +162,10 @@ def validate(path: str) -> tuple[str | None, list[str]]:
     for key in schema["top"]:
         if key not in record:
             errors.append(f"{path}: missing top-level key {key!r}")
-    for sub in ("size", "capacity", "recovery"):
+    if kind == "metrics_snapshot" and not errors:
+        _check_metrics_snapshot(record, path, errors)
+    for sub in ("size", "capacity", "recovery", "baseline", "traced",
+                "budgets", "deadline", "flight_recorder"):
         if sub not in schema:
             continue
         block = record.get(sub)

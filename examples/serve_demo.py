@@ -34,7 +34,27 @@ parser.add_argument("--new-tokens", type=int, default=24)
 parser.add_argument("--shards", type=int, default=1,
                     help="> 1: demo the sharded Q15 sensor-fleet path "
                          "(serve/fleet) instead of the LM engine")
+parser.add_argument("--metrics-out", default=None,
+                    help="attach the repro.obs telemetry bundle (tracer + "
+                         "metrics) and write the metrics snapshot JSON "
+                         "(schema 'metrics_snapshot') to this path")
 args = parser.parse_args()
+
+
+def _make_obs():
+    if not args.metrics_out:
+        return None
+    from repro.obs import Observability
+    return Observability.full()
+
+
+def _write_metrics(obs) -> None:
+    if obs is None:
+        return
+    with open(args.metrics_out, "w") as f:
+        f.write(obs.metrics.dumps() + "\n")
+    phases = ", ".join(sorted(obs.tracer.phase_stats())) or "none"
+    print(f"wrote {args.metrics_out} (traced phases: {phases})")
 
 
 def fleet_demo(n_shards: int) -> None:
@@ -45,12 +65,13 @@ def fleet_demo(n_shards: int) -> None:
     from repro.serve.fleet import FleetConfig, FleetEngine
     from repro.serve.streaming import StreamingConfig
 
+    obs = _make_obs()
     qp = quantize_params(
         fg.init_params(fg.FastGRNNConfig(rank_w=2, rank_u=8),
                        jax.random.PRNGKey(0)), QuantConfig())
     windows = hapt.load("test", n=96).windows
     fleet = FleetEngine(qp, FleetConfig(
-        shards=n_shards, stream=StreamingConfig(max_slots=16)))
+        shards=n_shards, stream=StreamingConfig(max_slots=16)), obs=obs)
     for i, w in enumerate(windows):
         fleet.attach(f"sensor-{i}", w, total_steps=len(w))
     for _ in range(40):                      # advance mid-window...
@@ -77,6 +98,7 @@ def fleet_demo(n_shards: int) -> None:
           f"{st['shards']} per-shard schedulers")
     print(f"bit-exactness vs scalar QRuntime: {agree * 100:.1f}% "
           f"({'OK' if agree == 1.0 else 'MISMATCH'})")
+    _write_metrics(obs)
 
 
 if args.shards > 1:
@@ -91,7 +113,8 @@ params = registry.init(cfg, jax.random.PRNGKey(0))
 prompts = np.random.default_rng(0).integers(0, cfg.vocab_size,
                                             (args.batch, 12))
 
-fp = Engine(cfg, params, ServeConfig(max_len=64))
+obs = _make_obs()
+fp = Engine(cfg, params, ServeConfig(max_len=64), obs=obs)
 q8 = Engine(cfg, params, ServeConfig(max_len=64, quant_bits=8))
 out_fp = fp.generate(prompts, max_new=args.new_tokens)
 out_q8 = q8.generate(prompts, max_new=args.new_tokens)
@@ -116,3 +139,4 @@ n = registry.param_count(full)
 print(f"full {args.arch}: {n/1e9:.2f}B params -> weight bytes/decode-step "
       f"{n*2/1e9:.2f} GB (bf16) vs {n/1e9:.2f} GB (int8): the decode "
       f"memory-roofline term halves (see EXPERIMENTS.md Sec. Perf)")
+_write_metrics(obs)

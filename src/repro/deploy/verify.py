@@ -36,7 +36,6 @@ from __future__ import annotations
 import argparse
 import json
 import tempfile
-import time
 from typing import Any
 
 import numpy as np
@@ -44,6 +43,7 @@ import numpy as np
 from repro.core import fastgrnn as fg
 from repro.core.qruntime import QRuntime
 from repro.data import hapt
+from repro.obs import Tracer
 from .emit_c import CHostModel, compile_host, find_cc
 from .image import DeployImage, size_report, audit_platforms
 from .qvm import QVM
@@ -89,14 +89,21 @@ def _engine_run(qp, windows: np.ndarray, n_trace: int):
 
 def run_parity(img, qp=None, windows: np.ndarray | None = None, *,
                n_scalar: int = 32, n_trace: int = 8,
-               use_c: bool = True, use_fp32: bool = True) -> dict[str, Any]:
+               use_c: bool = True, use_fp32: bool = True,
+               tracer: Tracer | None = None) -> dict[str, Any]:
     """Cross-check every execution path over ``windows``; returns the
     agreement report.  Raises nothing — disagreements are reported, and the
     caller (tests / CI) decides what is fatal.
 
     ``img`` is either a packed :class:`DeployImage` (with ``qp`` supplied
     separately) or a :class:`repro.compress.ModelArtifact`, which carries
-    both and is lowered here."""
+    both and is lowered here.
+
+    Per-section timing rides on the shared span API
+    (:class:`repro.obs.Tracer` — one span per protocol section) instead
+    of ad-hoc ``perf_counter`` pairs; pass ``tracer=`` to aggregate the
+    parity run's spans into a caller-owned tracer, else a private one
+    backs the report's ``timings_s`` block."""
     from repro.compress import ModelArtifact
     provenance = None
     if isinstance(img, ModelArtifact):
@@ -106,55 +113,49 @@ def run_parity(img, qp=None, windows: np.ndarray | None = None, *,
     if qp is None or windows is None:
         raise TypeError("run_parity needs (artifact, windows=...) or "
                         "(image, qp, windows)")
-    t0 = time.perf_counter()
+    tr = Tracer(capacity=64) if tracer is None else tracer
+    t_total = tr.t()
     n_trace = min(n_trace, len(windows))
     n_scalar = min(n_scalar, len(windows))
     vm = QVM(img)
     xq = vm.quantize_input(windows)          # the shared sensor recording
     xdeq = vm.dequantize_input(xq)           # its float-engine view
     preds: dict[str, np.ndarray] = {}
-    timings: dict[str, float] = {}
     bitwise: dict[str, bool] = {}
 
-    t = time.perf_counter()
-    qvm_logits, qvm_traces = vm.run_windows(xq[:n_trace],
-                                            return_trajectory=True)
-    preds["qvm"] = np.argmax(vm.run_windows(xq), axis=1).astype(np.int32)
-    timings["qvm_s"] = round(time.perf_counter() - t, 3)
+    with tr.span("verify.qvm"):
+        qvm_logits, qvm_traces = vm.run_windows(xq[:n_trace],
+                                                return_trajectory=True)
+        preds["qvm"] = np.argmax(vm.run_windows(xq), axis=1).astype(np.int32)
 
-    t = time.perf_counter()
-    preds["engine"], eng_logits, eng_trajs = _engine_run(qp, xdeq, n_trace)
-    timings["engine_s"] = round(time.perf_counter() - t, 3)
+    with tr.span("verify.engine"):
+        preds["engine"], eng_logits, eng_trajs = _engine_run(qp, xdeq,
+                                                             n_trace)
 
     # scalar oracle on a subset (bit-identical to the engine by the
     # streaming test contract; the subset re-proves it inside this run)
     rt = QRuntime(qp)
-    t = time.perf_counter()
-    preds["qruntime_subset"] = rt.predict_batch(xdeq[:n_scalar])
-    sc_logits, sc_traj = rt.run_window(xdeq[0], return_trajectory=True)
-    bitwise["qruntime_engine_traj"] = bool(np.array_equal(
-        sc_traj.view(np.int32), eng_trajs[0].view(np.int32)))
-    timings["qruntime_subset_s"] = round(time.perf_counter() - t, 3)
+    with tr.span("verify.qruntime_subset"):
+        preds["qruntime_subset"] = rt.predict_batch(xdeq[:n_scalar])
+        sc_logits, sc_traj = rt.run_window(xdeq[0], return_trajectory=True)
+        bitwise["qruntime_engine_traj"] = bool(np.array_equal(
+            sc_traj.view(np.int32), eng_trajs[0].view(np.int32)))
 
     if use_fp32:
-        t = time.perf_counter()
-        preds["fp32"] = _fp32_predict(qp, xdeq)
-        timings["fp32_s"] = round(time.perf_counter() - t, 3)
+        with tr.span("verify.fp32"):
+            preds["fp32"] = _fp32_predict(qp, xdeq)
 
     if use_c and find_cc():
         with tempfile.TemporaryDirectory() as td:
-            t = time.perf_counter()
-            bin_f = compile_host(img, td + "/f", engine="float")
-            bin_i = compile_host(img, td + "/i", engine="int")
-            timings["cc_build_s"] = round(time.perf_counter() - t, 3)
+            with tr.span("verify.cc_build"):
+                bin_f = compile_host(img, td + "/f", engine="float")
+                bin_i = compile_host(img, td + "/i", engine="int")
             cf = CHostModel(bin_f, img.H, img.C, engine="float")
             ci = CHostModel(bin_i, img.H, img.C, engine="int")
-            t = time.perf_counter()
-            preds["c_float"] = cf.predict_batch(xq)
-            timings["c_float_s"] = round(time.perf_counter() - t, 3)
-            t = time.perf_counter()
-            preds["c_int"] = ci.predict_batch(xq)
-            timings["c_int_s"] = round(time.perf_counter() - t, 3)
+            with tr.span("verify.c_float"):
+                preds["c_float"] = cf.predict_batch(xq)
+            with tr.span("verify.c_int"):
+                preds["c_int"] = ci.predict_batch(xq)
             ftr, flg, _ = cf.trace(xq[:n_trace])
             itr, ilg, _ = ci.trace(xq[:n_trace])
             # paper contribution (i): the deployed float C is bit-identical
@@ -201,8 +202,13 @@ def run_parity(img, qp=None, windows: np.ndarray | None = None, *,
         "budgets": {e: {k: {kk: vv for kk, vv in v.items() if kk != "fits"}
                         for k, v in audit_platforms(img, engine=e).items()}
                     for e in ("float", "int")},
-        "timings_s": timings,
-        "total_s": round(time.perf_counter() - t0, 3),
+        # span totals, renamed onto the report's historical timing keys
+        # (verify.qvm -> qvm_s, ...) so downstream consumers are unmoved
+        "timings_s": {name.removeprefix("verify.") + "_s": round(secs, 3)
+                      for name, secs in tr.totals_s().items()
+                      if name.startswith("verify.")
+                      and name != "verify.total"},
+        "total_s": round(tr.rec("verify.total", t_total) / 1e9, 3),
     }
     if provenance is not None:
         report["provenance"] = provenance

@@ -46,6 +46,7 @@ import numpy as np
 
 from repro.compress.tree import dequantize_tree, quantize_tree
 from repro.models import transformer as T
+from repro.obs import NULL_OBS, Observability
 from repro.serve.scheduler import HostProgram, SlotScheduler, TickReport
 
 
@@ -80,9 +81,16 @@ class Completion:
 class Engine:
     """Continuous-batching LM engine (prefill-into-slot + slotted decode)."""
 
-    def __init__(self, cfg, params, serve_cfg: ServeConfig | None = None):
+    def __init__(self, cfg, params, serve_cfg: ServeConfig | None = None,
+                 *, obs: Observability | None = None):
         self.cfg = cfg
         self.scfg = scfg = serve_cfg or ServeConfig()
+        # same observability seam as the streaming stack: spans for the
+        # two jit'd sections (lm.prefill / lm.decode) plus a per-tick
+        # latency histogram and token counter; NULL_OBS keeps every hook
+        # a no-op on the default path
+        self._obs = NULL_OBS if obs is None else obs
+        self._tracer = self._obs.tracer
         if scfg.quant_bits:
             self.qparams, self.scales = quantize_tree(
                 params, scfg.quant_bits)
@@ -127,7 +135,8 @@ class Engine:
         self._decode_ticks = 0
         self._tokens_generated = 0
         self.sched = SlotScheduler(S, HostProgram(self),
-                                   admit_policy=scfg.admit_policy)
+                                   admit_policy=scfg.admit_policy,
+                                   tracer=self._tracer)
 
     # ------------------------------------------------------------------
     # Request API
@@ -160,7 +169,16 @@ class Engine:
     def tick(self) -> list[Completion]:
         """One scheduling round: admit+prefill into free slots, one batched
         decode step over all resident sequences, release finished slots."""
-        return self.sched.tick()
+        if not self._obs.enabled:
+            return self.sched.tick()
+        t0 = self._tracer.t()
+        events = self.sched.tick()
+        dur_ns = self._tracer.rec("lm.tick", t0)
+        if self._obs.metrics is not None:
+            self._obs.metrics.histogram(
+                "lm.tick_us", "LM engine tick latency",
+                wallclock=True).observe_ns(dur_ns)
+        return events
 
     def run(self) -> list[Completion]:
         """Tick until every submitted request has completed."""
@@ -235,8 +253,10 @@ class Engine:
         batch = {"tokens": jnp.asarray(req.tokens[None, :])}
         if req.extra:
             batch.update({k: jnp.asarray(v) for k, v in req.extra.items()})
+        t0 = self._tracer.t()
         out, self.cache = self._prefill_fn(batch)(
             self.params, self.cache, batch, slot)
+        self._tracer.rec("lm.prefill", t0)
         logits = self._head_logits(out[:, -1:]) if self._quant_head \
             else out[:, -1, :]
         first = self._sample(logits)[0]
@@ -252,9 +272,11 @@ class Engine:
     def _advance(self, resident: np.ndarray) -> TickReport:
         need = resident & ~self._eos_done & (self._emitted < self._budget)
         if need.any():
+            t0 = self._tracer.t()
             out, self.cache = self._decode(
                 self.params, self.cache, jnp.asarray(self._last),
                 jnp.asarray(need))
+            self._tracer.rec("lm.decode", t0)
             logits = self._head_logits(out) if self._quant_head \
                 else out[:, 0, :]
             nxt = self._sample(logits)                    # (S,) batched
@@ -266,6 +288,10 @@ class Engine:
                 self._eos_done[rows] |= (nxt[rows] == self.scfg.eos_id)
             self._decode_ticks += 1
             self._tokens_generated += int(rows.size)
+            if self._obs.metrics is not None:
+                self._obs.metrics.counter(
+                    "lm.tokens_generated",
+                    "tokens emitted by decode ticks").inc(int(rows.size))
         finished = resident & (self._eos_done | (self._emitted >= self._budget))
         fin_rows = np.nonzero(finished)[0].tolist()
         events = [Completion(self.sched.request_at(s),

@@ -4,7 +4,7 @@ door, with wire-format stream checkpoints and bit-exact crash failover.
 See ``docs/fleet.md`` for routing, migration, drain and failover
 semantics and measured scaling."""
 from .engine import FleetConfig, FleetEngine, classify_windows_fleet
-from .faults import PHASES, FaultInjector, ScheduledFaults
+from .faults import PHASES, FaultInjector, ScheduledFaults, crash_matrix
 from .placement import shard_devices
 from .routing import hrw_weight, rank_shards, route
 from .wire import (WIRE_MAJOR, WIRE_MINOR, WireCorruptError, WireError,
@@ -14,7 +14,7 @@ from .wire import (WIRE_MAJOR, WIRE_MINOR, WireCorruptError, WireError,
 __all__ = [
     "FleetConfig", "FleetEngine", "classify_windows_fleet",
     "shard_devices", "hrw_weight", "rank_shards", "route",
-    "PHASES", "FaultInjector", "ScheduledFaults",
+    "PHASES", "FaultInjector", "ScheduledFaults", "crash_matrix",
     "WIRE_MAJOR", "WIRE_MINOR", "WireError", "WireVersionError",
     "WireTruncatedError", "WireCorruptError",
     "encode_stream_state", "decode_stream_state",

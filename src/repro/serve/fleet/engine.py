@@ -58,6 +58,7 @@ import numpy as np
 
 from repro.core import quantization as q
 from repro.kernels.fastgrnn_cell.ops import Q15StreamStep
+from repro.obs import NULL_OBS, Observability, assert_conservation
 from repro.serve.scheduler import TickReport
 from repro.serve.streaming import (StreamEvent, StreamEventBatch, StreamState,
                                    StreamingConfig, StreamingEngine,
@@ -120,7 +121,8 @@ class FleetEngine:
                  *, quant: q.QuantConfig | None = None,
                  act_scales: dict[str, float] | None = None,
                  naive_acts: bool = False,
-                 faults: FaultInjector | None = None):
+                 faults: FaultInjector | None = None,
+                 obs: Observability | None = None):
         config = config or FleetConfig()
         if config.shards < 1:
             raise ValueError("shards must be >= 1")
@@ -130,15 +132,17 @@ class FleetEngine:
         self._act_scales = act_scales     # kept to rebuild a crashed shard
         self._naive_acts = naive_acts
         self._faults = faults
+        # observability seam (repro.obs): every shard shares the fleet's
+        # tracer/registry (spans carry the shard index; fixed-bucket
+        # histograms merge by construction); NULL_OBS = all hooks no-ops
+        self.obs = obs or NULL_OBS
+        self._tracer = self.obs.tracer
         self.qp = coerce_qp(params_or_qp, quant)
         devices = placement.shard_devices(
             config.shards, config.placement, config.stream.backend)
         self.shard_keys = [f"shard-{i}" for i in range(config.shards)]
         self.shards = [
-            StreamingEngine(
-                self.qp,
-                dataclasses.replace(config.stream, device=devices[i]),
-                act_scales=act_scales, naive_acts=naive_acts)
+            self._make_shard(devices[i], i)
             for i in range(config.shards)]
         self._routable = [True] * config.shards
         # device groups for fused dispatch: co-located shards batch into
@@ -199,17 +203,117 @@ class FleetEngine:
         else:
             self._x_big = None
             self._av_big = None
+        # per-tick SLO deadline (ns): the paper's real-time bar is one
+        # sample period (50 Hz -> 20 ms); overridable via obs.deadline_ms
+        deadline_ms = self.obs.deadline_ms
+        if deadline_ms is None:
+            deadline_ms = 1e3 / config.stream.sample_rate_hz
+        self._deadline_ns = deadline_ms * 1e6
+        self._advanced_per_shard = [0] * config.shards
+        if self.obs.metrics is not None:
+            self._init_fleet_metrics()
+
+    def _init_fleet_metrics(self) -> None:
+        """Pre-register the fleet's SLO metric handles (no per-tick dict
+        lookups on the instrumented path)."""
+        reg = self.obs.metrics
+        self._m_tick = reg.histogram(
+            "fleet.tick_us", "wall time of one fleet tick", wallclock=True)
+        self._m_ticks = reg.counter("fleet.ticks", "fleet ticks")
+        self._m_events = reg.counter(
+            "fleet.events_emitted", "stream events delivered to the consumer")
+        self._m_miss_ticks = reg.counter(
+            "fleet.deadline_miss_ticks",
+            "ticks whose wall time exceeded the per-sample deadline",
+            wallclock=True)
+        self._m_miss_streams = reg.counter(
+            "fleet.deadline_miss_stream_ticks",
+            "stream-steps advanced in ticks that missed the deadline "
+            "(each is one stream observing one late 50 Hz sample)",
+            wallclock=True)
+        self._m_shard_miss = [
+            reg.counter(f"fleet.shard{i}.deadline_miss_stream_ticks",
+                        "per-shard share of deadline-missed stream-steps",
+                        wallclock=True)
+            for i in range(self.config.shards)]
+        self._m_active = reg.gauge("fleet.active", "resident streams")
+        self._m_pending = reg.gauge("fleet.pending", "shard-queued streams")
+        self._m_spilled = reg.gauge(
+            "fleet.spilled", "streams in the fleet spillover queue")
+        self._m_occupancy = reg.gauge(
+            "fleet.occupancy", "resident streams / total slots")
+        self._m_failovers = reg.counter(
+            "fleet.failovers", "shard crash-failovers", wallclock=True)
+        self._m_migrations = reg.counter(
+            "fleet.migrations", "live stream migrations")
+
+    def _tick_metrics(self, dur_ns: int, events: list) -> None:
+        """Per-tick SLO accounting: tick-latency histogram, 50 Hz
+        deadline-miss counters (fleet and per-shard, in stream-ticks),
+        occupancy/queue-depth gauges."""
+        self._m_ticks.inc()
+        self._m_tick.observe_us(dur_ns / 1e3)
+        advanced = sum(self._advanced_per_shard)
+        if advanced and dur_ns > self._deadline_ns:
+            self._m_miss_ticks.inc()
+            self._m_miss_streams.inc(advanced)
+            for i, a in enumerate(self._advanced_per_shard):
+                if a:
+                    self._m_shard_miss[i].inc(a)
+        n_ev = sum(len(e.stream_ids) if isinstance(e, StreamEventBatch)
+                   else 1 for e in events)
+        self._m_events.inc(n_ev)
+        self._m_active.set(self.n_active)
+        self._m_pending.set(self.n_pending)
+        self._m_spilled.set(len(self._spilled))
+        slots = self.max_streams
+        self._m_occupancy.set(self.n_active / slots if slots else 0.0)
+
+    def _note_shard_events(self, shard: int, evs: list) -> None:
+        """Feed the flight recorder one shard's tick emission as compact
+        (stream_id, kind, step) triples — columnar batches contribute
+        their tail, never a full O(events) expansion."""
+        rec = self.obs.recorder
+        cap = rec.events_per_shard
+        total = 0
+        summ: list[tuple] = []
+        for e in evs:
+            if isinstance(e, StreamEventBatch):
+                n = len(e.stream_ids)
+                total += n
+                take = min(cap, n)
+                summ.extend(zip(
+                    e.stream_ids[n - take:],
+                    ("final" if f else "window" for f in e.final[n - take:]),
+                    e.steps[n - take:].tolist()))
+            else:
+                total += 1
+                summ.append((e.stream_id, e.kind, e.step))
+        rec.note_events(shard, self._ticks, summ[-cap:], total=total)
+
+    def _make_shard(self, device, index: int) -> StreamingEngine:
+        """Construct one shard engine wired into the fleet's shared
+        observability bundle (spans/metrics tagged with the shard index)."""
+        sh = StreamingEngine(
+            self.qp,
+            dataclasses.replace(self.config.stream, device=device),
+            act_scales=self._act_scales, naive_acts=self._naive_acts,
+            obs=self.obs)
+        sh._obs_shard = index
+        sh._sched.shard = index
+        return sh
 
     @classmethod
     def from_artifact(cls, artifact, config: FleetConfig | None = None, *,
                       quantized_acts: bool = False,
                       naive_acts: bool = False,
-                      faults: FaultInjector | None = None) -> "FleetEngine":
+                      faults: FaultInjector | None = None,
+                      obs: Observability | None = None) -> "FleetEngine":
         """Build the fleet from a compression-pipeline artifact — the same
         contract as :meth:`StreamingEngine.from_artifact`."""
         return cls(artifact, config,
                    act_scales=artifact.runtime_scales(quantized_acts),
-                   naive_acts=naive_acts, faults=faults)
+                   naive_acts=naive_acts, faults=faults, obs=obs)
 
     # ------------------------------------------------------------------
     # Session lifecycle (StreamingEngine-shaped)
@@ -301,53 +405,84 @@ class FleetEngine:
         injector at each phase boundary (``faults.PHASES``): before any
         work, between the fused dispatch's two halves, and after events
         were handed to the consumer."""
+        tr = self._tracer
         self._ticks += 1
+        tr.set_tick(self._ticks)
+        t_tick = tr.t()
         self._fire("pre_tick")
         se = self.config.snapshot_every
         if se is not None and self._ticks % se == 0:
+            t0 = tr.t()
             self.snapshot_now()
-        self._flush_spill()
+            tr.rec("fleet.snapshot", t0)
+        if self._spilled:
+            t0 = tr.t()
+            self._flush_spill()
+            tr.rec("fleet.flush_spill", t0)
         live = self.n_active + self.n_pending
         if len(self._owner) > 2 * live + 1024:
             self._compact_owners()       # bound stale finished-id entries
         if not self.config.fuse_ticks:
             self._fire("mid_dispatch")
             events: list[StreamEvent] = []
-            for shard in self.shards:
-                events.extend(shard.step())
+            rec = self.obs.recorder
+            for i, shard in enumerate(self.shards):
+                out = shard.step()
+                self._advanced_per_shard[i] = shard._last_advanced
+                if rec is not None and out:
+                    self._note_shard_events(i, out)
+                events.extend(out)
         else:
             events = self._step_fused()
+        t0 = tr.t()
         self._deliver(events)
+        tr.rec("fleet.deliver", t0)
         self._fire("post_emit")
+        dur_ns = tr.rec("fleet.tick", t_tick)
+        if self.obs.metrics is not None:
+            self._tick_metrics(dur_ns, events)
         return events
 
     def _step_fused(self) -> list[StreamEvent]:
+        tr = self._tracer
         # phase 1: every shard runs admission + ring gather (no kernel)
+        t0 = tr.t()
         begun: list[tuple] = []
         for shard in self.shards:
             resident = shard._sched.tick_begin()
             handle = (shard._advance_begin(resident)
                       if resident is not None else None)
             begun.append((resident, handle))
+        tr.rec("fleet.begin", t0)
         # a shard crashed between the tick's two halves never reaches the
         # kernel: its gathered handle points at the dead engine's arrays
         for i in self._fire("mid_dispatch"):
             begun[i] = (None, None)
         # phase 2: one batched kernel dispatch per device group
         h_out: dict[int, np.ndarray] = {}
+        t0 = tr.t()
         if self._x_big is not None:
             self._dispatch_single_group(begun, h_out)
         else:
             self._dispatch_groups(begun, h_out)
+        tr.rec("fleet.dispatch", t0)
         # phase 3: per-shard bookkeeping + scheduler release accounting
+        t0 = tr.t()
         events: list[StreamEvent] = []
+        rec = self.obs.recorder
         for i, (resident, handle) in enumerate(begun):
+            self._advanced_per_shard[i] = 0
             if resident is None:
                 continue
             shard = self.shards[i]
             report = (shard._advance_finish(handle, h_out[i])
                       if handle is not None else TickReport())
-            events.extend(shard._sched.tick_finish(report))
+            self._advanced_per_shard[i] = report.advanced
+            out = shard._sched.tick_finish(report)
+            if rec is not None and out:
+                self._note_shard_events(i, out)
+            events.extend(out)
+        tr.rec("fleet.finish", t0)
         return events
 
     def _dispatch_single_group(self, begun: list, h_out: dict) -> None:
@@ -457,6 +592,8 @@ class FleetEngine:
         state = self.shards[src].export_stream(stream_id)
         self._owner[stream_id] = dst
         self._migrations += 1
+        if self.obs.metrics is not None:
+            self._m_migrations.inc()
         # carry the delivered-step watermark: a stream migrated while
         # replaying a crash recovery must keep suppressing already-seen
         # events on its new shard
@@ -484,6 +621,8 @@ class FleetEngine:
             self._migrations += 1
             self.shards[dst].import_stream(
                 state, suppress_steps_until=self._cursor.get(sid))
+        if moved and self.obs.metrics is not None:
+            self._m_migrations.inc(len(moved))
         return moved
 
     def recommission(self, shard: int) -> None:
@@ -549,9 +688,7 @@ class FleetEngine:
         self._retire(old.stats())
         victims = [sid for sid, o in self._owner.items()
                    if o == shard and sid in self._journal]
-        new = StreamingEngine(self.qp, old.config,
-                              act_scales=self._act_scales,
-                              naive_acts=self._naive_acts)
+        new = self._make_shard(old.config.device, shard)
         self.shards[shard] = new
         if self._x_big is not None:   # rewire the fused-x view segment
             new._x = self._x_big[self._offsets[shard]:
@@ -582,9 +719,21 @@ class FleetEngine:
                 replayed += len(chunk)
         self._failovers += 1
         self._replayed_samples += replayed
-        return {"shard": shard, "phase": phase,
-                "streams_recovered": len(victims),
-                "replayed_samples": replayed, "wire_bytes": wire_bytes}
+        report = {"shard": shard, "phase": phase,
+                  "streams_recovered": len(victims),
+                  "replayed_samples": replayed, "wire_bytes": wire_bytes}
+        if self.obs.metrics is not None:
+            self._m_failovers.inc()
+        if self.obs.recorder is not None:
+            # the black box: dump the tracer's pre-crash span ring plus
+            # the last events each shard emitted, as a typed artifact
+            self.obs.recorder.record_crash(
+                report, tick=self._ticks,
+                counters={"ticks": self._ticks,
+                          "failovers": self._failovers,
+                          "migrations": self._migrations,
+                          "global_spills": self._global_spills})
+        return report
 
     def _fire(self, phase: str) -> list[int]:
         """Poll the fault injector at a tick phase; crash-fail whatever
@@ -664,21 +813,41 @@ class FleetEngine:
         """Total resident capacity: shards * slots-per-shard."""
         return sum(s.config.max_slots for s in self.shards)
 
+    #: Workload / scheduler counter keys summed across shards by
+    #: :meth:`stats` in one pass (monotonic keys also fold in the
+    #: retired accumulators of crashed shards).
+    _WORKLOAD_KEYS = ("active", "pending", "completed", "stream_steps",
+                      "ring_spills", "replay_suppressed")
+    _SCHED_KEYS = ("active", "pending", "peak_active", "admissions",
+                   "recycles", "spills", "completed", "cancelled",
+                   "evictions", "ticks")
+
     def stats(self) -> dict[str, Any]:
         """Fleet-wide roll-up: every scheduler/workload counter summed
         across shards (``scheduler`` mirrors the single engine's composed
         counter block), per-shard breakdown preserved under
-        ``per_shard``, fleet-level counters alongside."""
+        ``per_shard``, fleet-level counters alongside.
+
+        Complexity contract: **O(shards)**, never O(streams) — one
+        ``shard.stats()`` call per shard and a single accumulation pass
+        over the per-shard dicts (locked in by a regression test that
+        poisons stream-keyed containers).  With ``obs.debug`` set, the
+        roll-up is checked against the counter-conservation invariant
+        (:func:`repro.obs.invariants.assert_conservation`) before being
+        returned."""
         per_shard = [s.stats() for s in self.shards]
         slots = self.max_streams
 
-        def tot(key):
-            return sum(p[key] for p in per_shard)
+        tot = dict.fromkeys(self._WORKLOAD_KEYS, 0)
+        sched_tot = dict.fromkeys(self._SCHED_KEYS, 0)
+        for p in per_shard:                # the single O(shards) pass
+            for k in self._WORKLOAD_KEYS:
+                tot[k] += p[k]
+            psc = p["scheduler"]
+            for k in self._SCHED_KEYS:
+                sched_tot[k] += psc[k]
 
-        def sched_tot(key):
-            return sum(p["scheduler"][key] for p in per_shard)
-
-        return {
+        out = {
             "shards": len(self.shards),
             "routable": list(self._routable),
             "backend": self.config.stream.backend,
@@ -687,17 +856,17 @@ class FleetEngine:
                         for d in self._devices],
             "fuse_ticks": self.config.fuse_ticks,
             "max_streams": slots,
-            "active": tot("active"),
-            "pending": tot("pending"),
+            "active": tot["active"],
+            "pending": tot["pending"],
             "spilled": len(self._spilled),
             # monotonic workload counters include crashed shards' retired
             # totals, so conservation (fleet total == sum(per_shard) +
             # retired) holds under crash/recover lifecycles
-            "completed": tot("completed") + self._retired["completed"],
-            "stream_steps": (tot("stream_steps")
+            "completed": tot["completed"] + self._retired["completed"],
+            "stream_steps": (tot["stream_steps"]
                              + self._retired["stream_steps"]),
-            "ring_spills": tot("ring_spills") + self._retired["ring_spills"],
-            "replay_suppressed": (tot("replay_suppressed")
+            "ring_spills": tot["ring_spills"] + self._retired["ring_spills"],
+            "replay_suppressed": (tot["replay_suppressed"]
                                   + self._retired["replay_suppressed"]),
             "ticks": self._ticks,
             "global_spills": self._global_spills,
@@ -716,25 +885,19 @@ class FleetEngine:
                         "scheduler": dict(self._retired_sched)},
             "scheduler": {
                 "max_slots": slots,
-                "active": sched_tot("active"),
-                "pending": sched_tot("pending"),
-                "occupancy": (sched_tot("active") / slots) if slots else 0.0,
-                "peak_active": sched_tot("peak_active"),
-                "admissions": (sched_tot("admissions")
-                               + self._retired_sched["admissions"]),
-                "recycles": (sched_tot("recycles")
-                             + self._retired_sched["recycles"]),
-                "spills": sched_tot("spills") + self._retired_sched["spills"],
-                "completed": (sched_tot("completed")
-                              + self._retired_sched["completed"]),
-                "cancelled": (sched_tot("cancelled")
-                              + self._retired_sched["cancelled"]),
-                "evictions": (sched_tot("evictions")
-                              + self._retired_sched["evictions"]),
-                "ticks": sched_tot("ticks") + self._retired_sched["ticks"],
+                "active": sched_tot["active"],
+                "pending": sched_tot["pending"],
+                "occupancy": (sched_tot["active"] / slots) if slots else 0.0,
+                "peak_active": sched_tot["peak_active"],
+                **{k: sched_tot[k] + self._retired_sched[k]
+                   for k in ("admissions", "recycles", "spills", "completed",
+                             "cancelled", "evictions", "ticks")},
             },
             "per_shard": per_shard,
         }
+        if self.obs.debug:
+            assert_conservation(out)
+        return out
 
     # ------------------------------------------------------------------
     # Internals

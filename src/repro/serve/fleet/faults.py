@@ -81,3 +81,22 @@ class ScheduledFaults(FaultInjector):
         if stream_id in self.dup_snapshots:
             return (blob, blob)
         return (blob,)
+
+
+def crash_matrix(shards: int, *, start_tick: int = 10,
+                 spacing: int = 7) -> ScheduledFaults:
+    """The full phase x shard crash matrix as one deterministic schedule:
+    every shard crashed once at every tick phase, spread ``spacing`` ticks
+    apart so each recovery completes before the next fault lands.
+
+    This is the canonical worst-case failover workload shared by the
+    flight-recorder byte-stability gate (``tests/test_obs.py``,
+    ``benchmarks/obs_bench.py``): identical runs under the same matrix
+    must produce byte-identical deterministic crash dumps."""
+    schedule = []
+    t = start_tick
+    for phase in PHASES:
+        for s in range(shards):
+            schedule.append((t, phase, s))
+            t += spacing
+    return ScheduledFaults(schedule=tuple(schedule))

@@ -58,6 +58,8 @@ from typing import Any, Protocol, Sequence
 
 import numpy as np
 
+from repro.obs.trace import NULL_TRACER
+
 
 @dataclasses.dataclass
 class TickReport:
@@ -104,7 +106,7 @@ class SlotScheduler:
     ADMIT_POLICIES = ("any_free", "all_free")
 
     def __init__(self, max_slots: int, program: SlotProgram, *,
-                 admit_policy: str = "any_free"):
+                 admit_policy: str = "any_free", tracer=None):
         if max_slots < 1:
             raise ValueError("max_slots must be >= 1")
         if admit_policy not in self.ADMIT_POLICIES:
@@ -112,6 +114,11 @@ class SlotScheduler:
         self.max_slots = max_slots
         self.program = program
         self.admit_policy = admit_policy
+        # tick-phase tracing seam (repro.obs): admission work is spanned
+        # as "sched.admit" only when something is actually admissible, so
+        # the idle-queue fast path never takes a timestamp
+        self.tracer = NULL_TRACER if tracer is None else tracer
+        self.shard = -1     # fleet shard index tag for spans (set by owner)
         self.resident = np.zeros(max_slots, bool)
         self._slot_request: list[str | None] = [None] * max_slots
         self._free: list[int] = list(range(max_slots - 1, -1, -1))
@@ -212,9 +219,12 @@ class SlotScheduler:
         releases) and return its events."""
         if report.advanced:
             self._ticks += 1
-        for slot in report.finished:
-            self._release(int(slot), reason="finished")
-            self._completed += 1
+        if len(report.finished):
+            t0 = self.tracer.t()
+            for slot in report.finished:
+                self._release(int(slot), reason="finished")
+                self._completed += 1
+            self.tracer.rec("sched.release", t0, self.shard)
         return report.events
 
     def has_work(self) -> bool:
@@ -259,11 +269,15 @@ class SlotScheduler:
     # Internals
     # ------------------------------------------------------------------
     def _try_admit(self) -> None:
+        if not (self._free and self._pending):
+            return
         if self.admit_policy == "all_free" and self.resident.any():
             return
+        t0 = self.tracer.t()
         while self._free and self._pending:
             rid = self._pending.popleft()
             self._place(rid, self._free.pop())
+        self.tracer.rec("sched.admit", t0, self.shard)
 
     def _place(self, request_id: str, slot: int) -> None:
         payload = self._payloads.pop(request_id)

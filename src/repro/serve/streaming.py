@@ -60,6 +60,7 @@ import numpy as np
 from repro.compress.artifact import ModelArtifact
 from repro.core import quantization as q
 from repro.kernels.fastgrnn_cell.ops import Q15StreamStep
+from repro.obs import NULL_OBS, Observability
 from repro.serve.scheduler import HostProgram, SlotScheduler, TickReport
 
 
@@ -198,10 +199,17 @@ class StreamingEngine:
     def __init__(self, params_or_qp, config: StreamingConfig | None = None,
                  *, quant: q.QuantConfig | None = None,
                  act_scales: dict[str, float] | None = None,
-                 naive_acts: bool = False):
+                 naive_acts: bool = False,
+                 obs: Observability | None = None):
         self.qp = coerce_qp(params_or_qp, quant)
         config = config or StreamingConfig()
         self.config = config
+        # observability seam (repro.obs): NULL_OBS keeps every hook a
+        # no-op so the bit-exact fast path is untouched by default
+        self._obs = obs or NULL_OBS
+        self._tracer = self._obs.tracer
+        self._obs_shard = -1        # fleet shard index tag (set by owner)
+        self._last_advanced = 0
         self.kernel = Q15StreamStep(self.qp, act_scales=act_scales,
                                     naive_acts=naive_acts,
                                     backend=config.backend,
@@ -230,8 +238,13 @@ class StreamingEngine:
         # steps <= this were already delivered before a crash; re-emissions
         # during replay are swallowed (state transitions still happen, so
         # the recovered trajectory stays bit-identical)
+        self._warm_seen = np.zeros(S, bool)  # per-slot: this stream already
+        # emitted a warm (post-warm-up) prediction — gates the once-per-
+        # stream warm-up-samples metric (paper contribution ii, measured
+        # continuously in serving)
         # --- placement: delegated to the shared slot scheduler ---------
-        self._sched = SlotScheduler(S, HostProgram(self))
+        self._sched = SlotScheduler(S, HostProgram(self),
+                                    tracer=self._tracer)
         self._sessions: dict[str, _Session] = {}
         self._trajectories: dict[str, list[np.ndarray]] = {}
         # telemetry (workload side; placement counters live in the scheduler)
@@ -243,7 +256,8 @@ class StreamingEngine:
     def from_artifact(cls, artifact: ModelArtifact,
                       config: StreamingConfig | None = None, *,
                       quantized_acts: bool = False,
-                      naive_acts: bool = False) -> "StreamingEngine":
+                      naive_acts: bool = False,
+                      obs: Observability | None = None) -> "StreamingEngine":
         """Build the engine from a compression-pipeline artifact.  The
         default is the deployed configuration (FP32 acts, bit-identical to
         ``QRuntime.from_artifact``); ``quantized_acts=True`` selects the
@@ -251,7 +265,7 @@ class StreamingEngine:
         ``ModelArtifact.runtime_scales`` (the gate shared with QRuntime)."""
         return cls(artifact, config,
                    act_scales=artifact.runtime_scales(quantized_acts),
-                   naive_acts=naive_acts)
+                   naive_acts=naive_acts, obs=obs)
 
     # ------------------------------------------------------------------
     # Session lifecycle
@@ -403,7 +417,34 @@ class StreamingEngine:
         buffered sample by exactly one step, and window/final events are
         emitted.  Streams without buffered samples idle (hidden state held
         bit-for-bit)."""
-        return self._sched.tick()
+        if not self._obs.enabled:
+            return self._sched.tick()
+        tr = self._tracer
+        self._last_advanced = 0
+        t0 = tr.t()
+        events = self._sched.tick()
+        dur_ns = tr.rec("engine.tick", t0, self._obs_shard)
+        if self._obs.metrics is not None:
+            self._tick_metrics(dur_ns, self._last_advanced)
+        return events
+
+    def _tick_metrics(self, dur_ns: int, advanced: int) -> None:
+        """Tick-latency SLO accounting for a standalone engine (a fleet
+        shard's ticks are accounted by the fleet front door instead)."""
+        reg = self._obs.metrics
+        us = dur_ns / 1e3
+        reg.histogram("engine.tick_us", "wall time of one engine tick",
+                      wallclock=True).observe_us(us)
+        deadline_ms = self._obs.deadline_ms
+        if deadline_ms is None:
+            deadline_ms = 1e3 / self.config.sample_rate_hz
+        if us > deadline_ms * 1e3 and advanced:
+            reg.counter("engine.deadline_miss_ticks",
+                        "ticks over the per-sample deadline",
+                        wallclock=True).inc()
+            reg.counter("engine.deadline_miss_stream_ticks",
+                        "stream-steps advanced in ticks that missed "
+                        "the deadline", wallclock=True).inc(advanced)
 
     def drain(self) -> list[StreamEvent]:
         """Tick until no resident or pending stream can advance (buffers
@@ -446,6 +487,7 @@ class StreamingEngine:
         self._tap[slot] = s.record_trajectory
         self._n_taps += int(s.record_trajectory)
         self._suppress[slot] = -1
+        self._warm_seen[slot] = False
         if s.restore is not None:     # migrated-in stream: resume, don't reset
             h0, steps0, wstep0, suppress0 = s.restore
             if not self._h.flags.writeable:   # jit/pallas outputs are
@@ -454,6 +496,9 @@ class StreamingEngine:
             self._steps[slot] = steps0
             self._wstep[slot] = wstep0
             self._suppress[slot] = suppress0
+            # a migrated-in stream past warm-up already reported its
+            # warm-up sample count on its previous shard
+            self._warm_seen[slot] = steps0 >= self.config.warmup_samples
             s.restore = None
         while s.chunks:
             self._ring_write(slot, s.chunks.popleft())
@@ -463,7 +508,10 @@ class StreamingEngine:
         if handle is None:
             return TickReport()
         avail, rows = handle
+        tr = self._tracer
+        t0 = tr.t()
         h_new = self.kernel.step_rows(self._h, self._x, avail, rows)
+        tr.rec("engine.kernel", t0, self._obs_shard)
         return self._advance_finish(handle, h_new)
 
     def _advance_begin(self, resident: np.ndarray):
@@ -477,6 +525,7 @@ class StreamingEngine:
         rows = np.nonzero(avail)[0]
         if rows.size == 0:
             return None
+        t0 = self._tracer.t()
         # gather one sample per advancing slot from the ring (vectorized)
         x = self._x
         full = rows.size == x.shape[0]
@@ -491,6 +540,7 @@ class StreamingEngine:
         else:                          # streams drifted apart: 2-d gather
             x[:] = 0.0
             x[rows] = self._ring[heads % self._cap, rows]
+        self._tracer.rec("engine.gather", t0, self._obs_shard)
         return (avail, rows)
 
     def _advance_finish(self, handle, h_new: np.ndarray) -> TickReport:
@@ -498,6 +548,8 @@ class StreamingEngine:
         bookkeeping — cursors, counters, trajectory taps, window/final
         emission, tumbling-window resets."""
         avail, rows = handle
+        t_fin = self._tracer.t()
+        self._last_advanced = int(rows.size)
         self._h = h_new
         if rows.size == self._head.size:     # steady state: every slot moved
             self._head += 1
@@ -524,6 +576,7 @@ class StreamingEngine:
         events: list[StreamEvent] = []
         finished_rows: list[int] = []
         if emit_rows.size:               # rare tick: something emits
+            t_emit = self._tracer.t()
             # replay cursor: events the consumer already saw before a
             # crash are swallowed; window-reset/finish bookkeeping below
             # still uses the full emit set, so the recovered state
@@ -542,13 +595,41 @@ class StreamingEngine:
                         events.append(self._event(
                             self._sched.request_at(int(slot)), int(slot),
                             kind, int(self._wstep[slot]), logits[i]))
+                if self._obs.metrics is not None:
+                    self._emit_metrics(deliver)
             finished_rows = np.nonzero(finished)[0].tolist()
             if np.any(at_window):
                 self._wstep[at_window] = 0
                 if self.config.reset_on_emit:
                     self._h = self.kernel.reset(self._h, at_window)
+            self._tracer.rec("engine.emit", t_emit, self._obs_shard)
+        self._tracer.rec("engine.finish", t_fin, self._obs_shard)
         return TickReport(events=events, finished=finished_rows,
                           advanced=int(rows.size))
+
+    def _emit_metrics(self, deliver: np.ndarray) -> None:
+        """Per-emission SLO metrics (only when a registry is attached):
+        warm/cold prediction counters, and the once-per-stream warm-up
+        sample count — how many samples a stream consumed before its
+        first confident (post-warm-up) prediction, the paper's Sec. VI-A
+        stabilization latency measured continuously in serving."""
+        reg = self._obs.metrics
+        steps = self._steps[deliver]
+        warm = steps >= self.config.warmup_samples
+        n_warm = int(warm.sum())
+        reg.counter("stream.warm_emissions",
+                    "predictions at/after the warm-up threshold").inc(n_warm)
+        reg.counter("stream.cold_emissions",
+                    "predictions before the warm-up threshold").inc(
+                        int(deliver.size) - n_warm)
+        first = warm & ~self._warm_seen[deliver]
+        if np.any(first):
+            reg.histogram(
+                "stream.warmup_samples",
+                "samples consumed before a stream's first warm "
+                "prediction (axis = samples, not us)").observe_many_us(
+                    steps[first])
+            self._warm_seen[deliver[first]] = True
 
     def _release_slot(self, slot: int, stream_id: str,
                       reason: str) -> StreamEvent | None:

@@ -12,6 +12,7 @@ from __future__ import annotations
 
 import numpy as np
 
+from repro.obs.invariants import assert_conservation
 from repro.serve.streaming import (StreamEventBatch, StreamingConfig,
                                    StreamingEngine)
 from repro.serve.fleet import FleetConfig, FleetEngine
@@ -58,14 +59,17 @@ def reference_log(qp, streams: dict, *, window: int = 128) -> dict:
 def run_crash_schedule(qp, streams: dict, *, shards: int,
                        slots_per_shard: int, injector,
                        snapshot_every: int = 64, window: int = 128,
-                       batch_events: bool = False) -> tuple[dict, dict]:
+                       batch_events: bool = False,
+                       obs=None) -> tuple[dict, dict]:
     """Drive every stream through a failover-enabled fleet under the
-    given fault injector, to completion.  Returns ``(event_log, stats)``."""
+    given fault injector, to completion.  Returns ``(event_log, stats)``.
+    Pass ``obs=`` (an :class:`repro.obs.Observability`) to run the same
+    schedule with the flight recorder / metrics attached."""
     fleet = FleetEngine(qp, FleetConfig(
         shards=shards,
         stream=StreamingConfig(max_slots=slots_per_shard, window=window,
                                batch_events=batch_events),
-        snapshot_every=snapshot_every), faults=injector)
+        snapshot_every=snapshot_every), faults=injector, obs=obs)
     log: dict = {}
     for sid, w in streams.items():
         fleet.attach(sid, w, total_steps=len(w))
@@ -88,23 +92,8 @@ def assert_logs_identical(got: dict, want: dict) -> None:
 
 
 def assert_counters_conserved(stats: dict) -> None:
-    """Fleet counter-conservation invariant: every monotonic fleet total
-    equals the sum over live shards plus the retired accumulator of
-    crashed shards — no counts lost or double-counted by failovers."""
-    per = stats["per_shard"]
-    retired = stats["retired"]
-    for key in ("completed", "stream_steps", "ring_spills",
-                "replay_suppressed"):
-        assert stats[key] == sum(p[key] for p in per) + retired[key], (
-            f"{key}: fleet total {stats[key]} != live "
-            f"{sum(p[key] for p in per)} + retired {retired[key]}")
-    rsched = retired["scheduler"]
-    for key in ("admissions", "recycles", "spills", "completed",
-                "cancelled", "evictions", "ticks"):
-        live = sum(p["scheduler"][key] for p in per)
-        assert stats["scheduler"][key] == live + rsched[key], (
-            f"scheduler.{key}: fleet total {stats['scheduler'][key]} != "
-            f"live {live} + retired {rsched[key]}")
-    # gauges stay live-only
-    for key in ("active", "pending"):
-        assert stats[key] == sum(p[key] for p in per)
+    """Fleet counter-conservation invariant — delegates to the shared
+    production implementation in :mod:`repro.obs.invariants` so the test
+    harness and the debug-mode ``FleetEngine.stats()`` assertion can
+    never drift apart."""
+    assert_conservation(stats)
