@@ -37,7 +37,8 @@ import numpy as np
 from repro.core import fastgrnn as fg
 from repro.core.quantization import quantize_params, QuantConfig
 from repro.data import hapt
-from repro.obs import MetricsRegistry, Observability
+from repro.kernels.fastgrnn_cell.ops import Q15StreamStep
+from repro.obs import MetricsRegistry, Observability, TRANSFER_KEYS
 from repro.serve.fleet import FleetConfig, FleetEngine
 from repro.serve.streaming import StreamingConfig
 
@@ -74,19 +75,30 @@ def _run(fleet: FleetEngine, n_streams: int,
          windows_per_stream: int) -> dict:
     total = 128 * windows_per_stream
     fleet.step()                                 # warm-up tick (jit compile)
+    # steady-window transfer accounting: the ticks right after warm-up
+    # are emission-free (the first window boundary is tick 128), so the
+    # h-state byte deltas over this window are the device-residency
+    # gate — zero on the resident jit/pallas paths, a full h round
+    # trip per tick on the host-staged ones
+    steady = min(16, total - 2)
+    tr0 = fleet.stats()["transfers"]
     tick_s = []
     t_start = time.perf_counter()
     done = 1
+    tr1 = tr0
     while done < total:
         t0 = time.perf_counter()
         fleet.step()
         tick_s.append(time.perf_counter() - t0)
         done += 1
+        if done == 1 + steady:
+            tr1 = fleet.stats()["transfers"]
     elapsed = time.perf_counter() - t_start
     stats = fleet.stats()
     assert stats["completed"] == n_streams, stats
     steps = n_streams * (total - 1)              # steps in the timed region
     tick_ms = np.asarray(tick_s) * 1e3
+    transfers = {k: int(tr1[k] - tr0[k]) for k in TRANSFER_KEYS}
     return {
         "concurrent_streams": n_streams,
         "ticks": len(tick_s),
@@ -94,6 +106,10 @@ def _run(fleet: FleetEngine, n_streams: int,
         "p50_ms": round(float(np.percentile(tick_ms, 50)), 4),
         "p99_ms": round(float(np.percentile(tick_ms, 99)), 4),
         "realtime_streams_50hz": int(steps / elapsed / 50.0),
+        "steady_ticks_measured": int(steady),
+        "transfers": transfers,
+        "zero_copy_h": transfers["h_h2d_bytes"] == 0
+        and transfers["h_d2h_bytes"] == 0,
         "scheduler": {k: stats["scheduler"][k] for k in
                       ("admissions", "recycles", "spills", "peak_active")},
     }
@@ -104,9 +120,14 @@ def main() -> None:
     parser.add_argument("--out", default="BENCH_fleet.json")
     parser.add_argument("--backend", default="jit",
                         choices=("exact", "jit", "pallas"))
-    parser.add_argument("--placement", default="host",
-                        help="shard placement (host = fused single-device "
-                             "ticks, the fast CPU configuration)")
+    parser.add_argument("--placement", default="host,devices",
+                        help="comma-separated shard-placement sweep: 'host' "
+                             "fuses all shards into one dispatch (the fast "
+                             "small-core CPU configuration), 'devices' "
+                             "round-robins shards over jax devices and "
+                             "issues every group's dispatch before waiting "
+                             "on any (skipped when fewer than 2 devices "
+                             "exist or the backend is exact)")
     parser.add_argument("--slots-per-shard", type=int, default=1024)
     parser.add_argument("--shards", default="1,2,4,8",
                         help="comma-separated shard counts for the scaling "
@@ -131,6 +152,19 @@ def main() -> None:
         args.capacity_shards, args.capacity_slots = 4, 256
         args.windows, args.reps = 1, 1
     shard_counts = [int(s) for s in args.shards.split(",")]
+    placements = [p.strip() for p in args.placement.split(",") if p.strip()]
+    resolved = []
+    for p in placements:
+        if p == "devices" and (args.backend == "exact"
+                               or len(jax.devices()) < 2):
+            print(f"skipping placement='devices' (backend={args.backend}, "
+                  f"{len(jax.devices())} jax device(s)); run with "
+                  f"XLA_FLAGS=--xla_force_host_platform_device_count=N to "
+                  f"fake a multi-device CPU topology", flush=True)
+            continue
+        resolved.append(p)
+    if not resolved:
+        resolved = ["host"]
     # metrics-only bundle (no tracer): the timed path stays NullTracer
     obs = (Observability(metrics=MetricsRegistry())
            if args.metrics_out else None)
@@ -141,32 +175,40 @@ def main() -> None:
     src = hapt.load("test", n=256).windows
 
     rows = []
-    for n in shard_counts:
-        n_streams = n * args.slots_per_shard
-        reps = []
-        for _ in range(max(1, args.reps)):   # median-of-N: small boxes
-            fleet = _build_fleet(qp, n, args.slots_per_shard, args.backend,
-                                 args.windows, args.placement, obs=obs)
-            _fill(fleet, src, n_streams, args.windows)
-            reps.append(_run(fleet, n_streams, args.windows))
-        reps.sort(key=lambda r: r["stream_steps_per_sec"])
-        row = {"shards": n, **reps[len(reps) // 2]}   # jitter badly
-        rows.append(row)
-        base = rows[0]["stream_steps_per_sec"]
-        row["scaling_x"] = round(row["stream_steps_per_sec"] / base, 2)
-        row["scaling_efficiency"] = round(
-            row["scaling_x"] / (n / shard_counts[0]), 3)
-        print(f"{n:2d} shards x {args.slots_per_shard}: "
-              f"{row['stream_steps_per_sec']:>12,.0f} steps/s  "
-              f"x{row['scaling_x']:.2f} vs 1 shard  "
-              f"p50 {row['p50_ms']:.3f} ms", flush=True)
+    for placement in resolved:
+        base = None
+        for n in shard_counts:
+            n_streams = n * args.slots_per_shard
+            reps = []
+            for _ in range(max(1, args.reps)):   # median-of-N: small boxes
+                fleet = _build_fleet(qp, n, args.slots_per_shard,
+                                     args.backend, args.windows, placement,
+                                     obs=obs)
+                _fill(fleet, src, n_streams, args.windows)
+                reps.append(_run(fleet, n_streams, args.windows))
+            reps.sort(key=lambda r: r["stream_steps_per_sec"])
+            row = {"shards": n, "placement": placement,
+                   **reps[len(reps) // 2]}        # jitter badly
+            rows.append(row)
+            if base is None:
+                base = row["stream_steps_per_sec"]
+            row["scaling_x"] = round(row["stream_steps_per_sec"] / base, 2)
+            row["scaling_efficiency"] = round(
+                row["scaling_x"] / (n / shard_counts[0]), 3)
+            print(f"{placement:7s} {n:2d} shards x {args.slots_per_shard}: "
+                  f"{row['stream_steps_per_sec']:>12,.0f} steps/s  "
+                  f"x{row['scaling_x']:.2f} vs 1 shard  "
+                  f"eff {row['scaling_efficiency']:.3f}  "
+                  f"p50 {row['p50_ms']:.3f} ms  "
+                  f"zero_copy_h={row['zero_copy_h']}", flush=True)
 
+    cap_placement = resolved[0]
     cap_streams = args.capacity_shards * args.capacity_slots
     cap_runs = []
     for rep in range(max(1, args.reps)):   # median-of-N, same as the rows
         cap_fleet = _build_fleet(qp, args.capacity_shards,
                                  args.capacity_slots, args.backend,
-                                 args.windows, args.placement, obs=obs)
+                                 args.windows, cap_placement, obs=obs)
         print(f"capacity rep {rep + 1}: filling {cap_streams:,} streams "
               f"...", flush=True)
         _fill(cap_fleet, src, cap_streams, args.windows)
@@ -174,6 +216,7 @@ def main() -> None:
     cap_runs.sort(key=lambda r: r["stream_steps_per_sec"])
     capacity = {"shards": args.capacity_shards,
                 "slots_per_shard": args.capacity_slots,
+                "placement": cap_placement,
                 **cap_runs[len(cap_runs) // 2]}
     capacity["sustained_realtime_50hz"] = bool(
         capacity["realtime_streams_50hz"] >= cap_streams)
@@ -182,21 +225,34 @@ def main() -> None:
           f"{capacity['realtime_streams_50hz']:,} real-time 50 Hz sensors "
           f"(sustained: {capacity['sustained_realtime_50hz']})", flush=True)
 
+    # achieved-vs-peak at the capacity point's measured aggregate rate,
+    # against the launch/roofline.py hardware model (satellite of the
+    # MXU-shaped kernel layout — reports both the real cell's FLOPs and
+    # what the 128-lane padded layout actually issues)
+    kern = Q15StreamStep(qp, backend=args.backend,
+                         mxu=(args.backend == "pallas"))
     record = {
         "benchmark": "fleet_sharding",
         "model": "FastGRNN H=16 r_w=2 r_u=8, Q15 PTQ (566-byte class)",
         "backend": args.backend,
-        "placement": args.placement,
+        "placement": cap_placement,
+        "placements": resolved,
         "slots_per_shard": args.slots_per_shard,
         "window": 128,
         "sample_rate_hz": 50.0,
         "host": {"platform": platform.platform(),
                  "cpus": __import__("os").cpu_count(),
                  "jax": jax.__version__,
+                 "devices": len(jax.devices()),
                  "device": str(jax.devices()[0])},
         "results": rows,
-        "scaling_1_to_max_x": rows[-1]["scaling_x"],
+        "scaling_1_to_max_x": max(
+            r["scaling_x"] for r in rows if r["placement"] == cap_placement),
+        "scaling_by_placement": {
+            p: max(r["scaling_x"] for r in rows if r["placement"] == p)
+            for p in resolved},
         "capacity": capacity,
+        "kernel_roofline": kern.roofline(capacity["stream_steps_per_sec"]),
     }
     with open(args.out, "w") as f:
         json.dump(record, f, indent=2)

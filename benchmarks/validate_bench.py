@@ -40,16 +40,26 @@ SCHEMAS: dict[str, dict] = {
     # claims (concurrent_streams, realtime_streams_50hz) so the artifact
     # cannot silently drop them.
     "fleet_sharding": {
-        "top": ["benchmark", "model", "backend", "placement",
+        "top": ["benchmark", "model", "backend", "placement", "placements",
                 "slots_per_shard", "window", "sample_rate_hz", "host",
-                "results", "scaling_1_to_max_x", "capacity"],
-        "row": ["shards", "concurrent_streams", "ticks",
+                "results", "scaling_1_to_max_x", "scaling_by_placement",
+                "capacity", "kernel_roofline"],
+        "row": ["shards", "placement", "concurrent_streams", "ticks",
                 "stream_steps_per_sec", "p50_ms", "p99_ms",
                 "realtime_streams_50hz", "scaling_x",
-                "scaling_efficiency", "scheduler"],
-        "capacity": ["shards", "slots_per_shard", "concurrent_streams",
-                     "stream_steps_per_sec", "realtime_streams_50hz",
-                     "sustained_realtime_50hz"],
+                "scaling_efficiency", "transfers", "zero_copy_h",
+                "scheduler"],
+        "capacity": ["shards", "slots_per_shard", "placement",
+                     "concurrent_streams", "stream_steps_per_sec",
+                     "realtime_streams_50hz", "sustained_realtime_50hz",
+                     "transfers", "zero_copy_h"],
+        # device-residency gate: h-state bytes over the steady window
+        # (repro.obs.transfers.TRANSFER_KEYS, per-row under "transfers")
+        "kernel_roofline": ["backend", "model_flops_per_stream_step",
+                            "padded_flops_per_stream_step",
+                            "hbm_bytes_per_stream_step", "achieved_gflops",
+                            "peak_fraction",
+                            "memory_bound_stream_steps_per_sec"],
     },
     # benchmarks/failover_bench.py: crash/recovery latency for a shard
     # holding `slots_per_shard` streams.  `recovery` pins the headline
@@ -165,7 +175,7 @@ def validate(path: str) -> tuple[str | None, list[str]]:
     if kind == "metrics_snapshot" and not errors:
         _check_metrics_snapshot(record, path, errors)
     for sub in ("size", "capacity", "recovery", "baseline", "traced",
-                "budgets", "deadline", "flight_recorder"):
+                "budgets", "deadline", "flight_recorder", "kernel_roofline"):
         if sub not in schema:
             continue
         block = record.get(sub)

@@ -143,12 +143,55 @@ def _q15_step_kernel(sig_ref, tanh_ref, x_ref, h_ref, mask_ref,
     out_ref[...] = jnp.pad(h_new, ((0, 0), (0, out_ref.shape[1] - H)))
 
 
+def _q15_step_kernel_mxu(sig_ref, tanh_ref, x_ref, h_ref, mask_ref,
+                         w_ref, u_ref, bz_ref, bh_ref, out_ref,
+                         *, zeta: float, nu: float):
+    """MXU-shaped variant of the batched single step: x/h stay in the full
+    128-lane padded layout and the two projections run as real
+    (B_TILE, 128) x (128, 128) contractions — one MXU pass each on TPU —
+    against *pre-dequantized, pre-multiplied* effective W^T/U^T (f32).
+
+    Padded lanes are inert by construction: effective-weight rows/columns
+    beyond (H, d) are zero, so ``pre`` is 0 there; the gate combine then
+    yields ``z * h = 0.5-ish * 0 = 0`` for padded h lanes (h enters padded
+    as zero every call — the resident wrapper in ops.py re-pads from the
+    (S, H) state), and the caller slices back to ``[:S, :H]``.  Numerics:
+    the MXU dot sums in hardware order, so hidden states drift from the
+    bit-exact reference like the jit backend does (~1e-9/step); argmax
+    predictions agree (gated in tests/test_device_fleet.py)."""
+    size = sig_ref.shape[0]
+    lo, hi = qstep.INPUT_MIN, qstep.INPUT_MAX
+    inv_bw = size / (hi - lo)
+
+    def lut(table, v):
+        idx = jnp.clip(((v - lo) * inv_bw).astype(jnp.int32), 0, size - 1)
+        y = jnp.take(table, idx)
+        return jnp.where(v >= hi, table[size - 1],
+                         jnp.where(v <= lo, table[0], y))
+
+    h = h_ref[...]
+    pre = jnp.dot(x_ref[...], w_ref[...],
+                  preferred_element_type=jnp.float32) \
+        + jnp.dot(h, u_ref[...], preferred_element_type=jnp.float32)
+    z = lut(sig_ref[...], pre + bz_ref[...])
+    h_tilde = lut(tanh_ref[...], pre + bh_ref[...])
+    h_new = (zeta * (1.0 - z) + nu) * h_tilde + z * h
+    out_ref[...] = jnp.where(mask_ref[...][:, None] != 0, h_new, h)
+
+
 def make_fastgrnn_step(sw: "qstep.StepWeights", *, hp: int = 128,
-                       interpret: bool = True):
-    """Build the batched single-step callable: pads the int16 weight
-    tensors, biases and LUTs to device layout ONCE (they are deployment
-    constants — this runs on every 50 Hz tick, so per-call re-padding
-    would dominate) and caches one ``pl.pallas_call`` per slot count.
+                       interpret: bool = True, mxu: bool = False):
+    """Build the batched single-step callable: pads the weight tensors,
+    biases and LUTs to device layout ONCE (they are deployment constants —
+    this runs on every 50 Hz tick, so per-call re-padding would dominate)
+    and caches one ``pl.pallas_call`` per slot count.
+
+    ``mxu=False`` (default): int16 Q15 weights dequantized on use, sliced
+    to real dims, qstep's fixed-order matvec loops — the layout whose op
+    order matches the scalar reference.  ``mxu=True``: the 128-lane padded
+    layout — effective W^T/U^T pre-multiplied to dense f32 (hp, hp) and the
+    projections lowered as (B_TILE, hp) x (hp, hp) MXU contractions
+    (achieved-vs-peak reported via ``Q15StreamStep.roofline``).
 
     Returns ``step(x, h, mask) -> h_new``: x (S, Dp), h (S, Hp), mask (S,)
     int32, S % B_TILE == 0 (ops.py pads).  Lanes >= H of h_new are zero."""
@@ -163,10 +206,20 @@ def make_fastgrnn_step(sw: "qstep.StepWeights", *, hp: int = 128,
         a = np.asarray(a, np.float32)
         return jnp.asarray(np.pad(a, (0, hp - a.shape[0])))
 
+    if mxu:
+        w_eff = (sw.w["W1"] @ sw.w["W2"].T if sw.low_rank
+                 else sw.w["W"]).astype(np.float32)          # (H, d)
+        u_eff = (sw.w["U1"] @ sw.w["U2"].T if sw.low_rank
+                 else sw.w["U"]).astype(np.float32)          # (H, H)
+        weight_ops = [pad2(w_eff.T), pad2(u_eff.T)]          # (hp, hp) f32
+        kernel = functools.partial(_q15_step_kernel_mxu,
+                                   zeta=float(sw.zeta), nu=float(sw.nu))
+    else:
+        weight_ops = [pad2(sw.q[n]) for n in names]          # int16 Q15
+        kernel = functools.partial(_q15_step_kernel, sw=sw, d=d, H=H)
     consts = ([jnp.asarray(sw.sig_lut), jnp.asarray(sw.tanh_lut)],
-              [pad2(sw.q[n]) for n in names],
+              weight_ops,
               [pad1(sw.b_z), pad1(sw.b_h)])
-    kernel = functools.partial(_q15_step_kernel, sw=sw, d=d, H=H)
     calls: dict[tuple[int, int], "object"] = {}
 
     def step(x, h, mask):
@@ -182,7 +235,7 @@ def make_fastgrnn_step(sw: "qstep.StepWeights", *, hp: int = 128,
                     pl.BlockSpec((B_TILE, dp), lambda b: (b, 0)),
                     pl.BlockSpec((B_TILE, hp), lambda b: (b, 0)),
                     pl.BlockSpec((B_TILE,), lambda b: (b,)),
-                    *[full((hp, hp)) for _ in names],
+                    *[full((hp, hp)) for _ in weight_ops],
                     full((hp,)), full((hp,)),
                 ],
                 out_specs=pl.BlockSpec((B_TILE, hp), lambda b: (b, 0)),

@@ -21,6 +21,7 @@ import numpy as np
 
 from repro.core import fastgrnn as fg
 from repro.core.lut import make_lut
+from repro.obs.transfers import TransferLedger
 from . import qstep
 from .kernel import fastgrnn_window, B_TILE
 
@@ -92,7 +93,7 @@ class Q15StreamStep:
 
     def __init__(self, qp_or_sw, *, act_scales=None, naive_acts=False,
                  backend: str = "exact", interpret: bool = True,
-                 device=None):
+                 device=None, mxu: bool = False):
         if backend not in self.BACKENDS:
             raise ValueError(f"backend must be one of {self.BACKENDS}")
         if isinstance(qp_or_sw, qstep.StepWeights):
@@ -102,12 +103,21 @@ class Q15StreamStep:
                 qp_or_sw, act_scales=act_scales, naive_acts=naive_acts)
         self.backend = backend
         self.interpret = interpret
+        if mxu and backend != "pallas":
+            raise ValueError("mxu=True requires the pallas backend (the "
+                             "128-lane MXU layout is a Pallas lowering)")
+        self.mxu = bool(mxu)
+        # host<->device byte accounting (always on — plain int adds); the
+        # fleet/engine stats() surface this and the zero-copy regression
+        # test reads it (see repro.obs.transfers)
+        self.transfers = TransferLedger()
         # ``device``: pin the jit/pallas dispatch (weight constants AND the
         # per-tick inputs) to one jax device — the fleet's per-shard
         # placement hook.  None = default device; the exact backend is
         # process-local NumPy and ignores it.
         self.device = device if backend != "exact" else None
         self._np_arrs = self.sw.arrays(np)
+        self._resident_step = None
         if backend == "exact":
             self._step = self._step_exact
         elif backend == "jit":
@@ -115,12 +125,17 @@ class Q15StreamStep:
             if self.device is not None:
                 self._jnp_arrs = {k: jax.device_put(v, self.device)
                                   for k, v in self._jnp_arrs.items()}
+            self._resident_step = self._build_jit_resident()
             self._step = self._build_jit()
         else:
             from .kernel import make_fastgrnn_step
             self._pallas_step = make_fastgrnn_step(
-                self.sw, hp=HP, interpret=interpret)
+                self.sw, hp=HP, interpret=interpret, mxu=self.mxu)
             self._step = self._step_pallas
+            self._resident_step = self._build_pallas_resident()
+        # device-side reset: jitted masked zero (no host h round-trip)
+        self._reset_resident = jax.jit(
+            lambda h, m: jnp.where(m[:, None], jnp.float32(0.0), h))
 
     # -- state management ---------------------------------------------------
     @property
@@ -144,6 +159,172 @@ class Q15StreamStep:
         fixed-order f32 head matvec (bit-identical to qruntime.run_window)."""
         return qstep.logits_batched(np, self._np_arrs, self.sw,
                                     np.asarray(h, np.float32))
+
+    # -- device-resident state (jit/pallas backends) ------------------------
+    # The streaming/fleet engines keep the hidden-state slot table as a jax
+    # device array between ticks: ``step_resident`` advances it with an
+    # async dispatch (steady-state ticks move zero h bytes across the
+    # host/device boundary), and
+    # the row-level accessors below pull/patch only the rows the host
+    # actually touches (emission, trajectory taps, snapshots, migration).
+    # Every boundary crossing is booked in ``self.transfers``.
+
+    @property
+    def supports_device_state(self) -> bool:
+        return self.backend != "exact"
+
+    @property
+    def device_state_profitable(self) -> bool:
+        """Default-on policy for device residency (config ``"auto"``):
+        the backend must support it AND the topology must offer real
+        device parallelism.  On a single host-platform CPU "device" the
+        resident path buys no concurrency (same cores either way) while
+        paying the async-dispatch sync and bookkeeping — measured ~16%
+        of a fused 1024-slot tick — so "auto" keeps the bit-identical
+        host-staged path there and goes resident only on a real
+        accelerator or a multi-device topology."""
+        return self.supports_device_state and (
+            jax.default_backend() != "cpu" or len(jax.devices()) > 1)
+
+    def init_state_device(self, n_slots: int):
+        """Zero-initialized (S, H) resident state (created on device — no
+        host upload to account)."""
+        z = jnp.zeros((n_slots, self.sw.hidden_dim), jnp.float32)
+        return z if self.device is None else jax.device_put(z, self.device)
+
+    def to_device(self, h: np.ndarray):
+        """Upload a host (S, H) state table (booked as h-state h2d)."""
+        h = np.ascontiguousarray(h, np.float32)
+        self.transfers.h2d(h.nbytes, state=True)
+        dev = jnp.asarray(h) if self.device is None \
+            else jax.device_put(h, self.device)
+        return dev
+
+    def to_host(self, h_dev) -> np.ndarray:
+        """Download the full resident table (snapshot/debug path)."""
+        out = np.array(h_dev, np.float32)
+        self.transfers.d2h(out.nbytes, state=True)
+        return out
+
+    def rows_to_host(self, h_dev, rows) -> np.ndarray:
+        """Pull only ``rows`` of the resident state to host (emission,
+        taps, lazy snapshots) — a (k, H) d2h instead of the full table."""
+        rows = np.asarray(rows)
+        out = np.array(h_dev[rows], np.float32)
+        self.transfers.d2h(out.nbytes, state=True)
+        return out
+
+    def set_rows_device(self, h_dev, rows, values: np.ndarray):
+        """Patch ``rows`` of the resident state with host values (migration
+        restore) — a (k, H) h2d instead of re-uploading the table."""
+        values = np.ascontiguousarray(values, np.float32)
+        self.transfers.h2d(values.nbytes, state=True)
+        return h_dev.at[np.asarray(rows)].set(values)
+
+    def reset_device(self, h_dev, mask: np.ndarray):
+        """Device-side :meth:`reset` — only the (S,) mask crosses h2d."""
+        mask = np.asarray(mask, bool)
+        self.transfers.h2d(mask.nbytes)
+        if self.device is not None:
+            mask = jax.device_put(mask, self.device)
+        return self._reset_resident(h_dev, mask)
+
+    def concat_device(self, parts):
+        """Device-side concat of per-shard h views (fused-tick fallback
+        when a shard rebound its state; no boundary crossing)."""
+        return jnp.concatenate(parts, axis=0)
+
+    def step_resident(self, h_dev, x: np.ndarray, active: np.ndarray):
+        """One masked batched step over the resident state.  Returns the
+        NEW device array immediately (async jax dispatch — the caller
+        decides when to block); callers must treat ``h_dev`` as consumed
+        and adopt the returned array (keeps the contract donation-ready
+        for accelerators where donation pays — on CPU it measurably
+        doesn't, see ``_build_jit_resident``).  Only x and the active
+        mask cross h2d; h never touches the host."""
+        x = np.asarray(x, np.float32)
+        active = np.asarray(active, bool)
+        self.transfers.h2d(x.nbytes + active.nbytes)
+        if self.device is not None:
+            x = jax.device_put(x, self.device)
+            active = jax.device_put(active, self.device)
+        return self._resident_step(h_dev, x, active)
+
+    def _build_jit_resident(self):
+        # Deliberately NOT donate_argnums=0: buffer donation makes XLA's
+        # CPU executable ~3x slower for this kernel (measured 0.20 ms vs
+        # 0.066 ms per 1024-row step) AND changes its fusion by ~1 ulp,
+        # so donating would cost both throughput and the host-vs-device
+        # bit-identity contract.  The resident path doesn't need it for
+        # zero-copy — h stays on device either way; donation would only
+        # save the output allocation.
+        arrs, sw = self._jnp_arrs, self.sw
+
+        @jax.jit
+        def f(h, x, active):
+            h_new = qstep.step_batched(jnp, arrs, sw, h, x)
+            return jnp.where(active[:, None], h_new, h)
+
+        return f
+
+    def _build_pallas_resident(self):
+        # Deliberately NOT wrapped in jax.jit: fusing the pad/slice into
+        # the kernel's jit trace changes XLA's FMA contraction per batch
+        # shape (~1 ulp between a 16-row dispatch and two 8-row ones),
+        # which breaks the fleet's shard-count-invariant bit-identity.
+        # Eager pads materialize the exact padded operands and the direct
+        # pallas_call is batch-shape-stable, so this path is bitwise equal
+        # to the host-staged ``_step_pallas`` at every batch size.  The
+        # ops still dispatch asynchronously; the trade is losing h-buffer
+        # donation (the pallas output allocates regardless).
+        pstep = self._pallas_step
+        H, d = self.sw.hidden_dim, self.sw.input_dim
+
+        def f(h, x, active):
+            S = h.shape[0]
+            sp = -S % B_TILE
+            h_p = jnp.pad(h, ((0, sp), (0, HP - H)))
+            x_p = jnp.pad(x, ((0, sp), (0, HP - d)))
+            m_p = jnp.pad(active.astype(jnp.int32), (0, sp))
+            return pstep(x_p, h_p, m_p)[:S, :H]
+
+        return f
+
+    def roofline(self, stream_steps_per_sec: float) -> dict:
+        """Achieved-vs-peak for the batched single step against the
+        ``launch/roofline.py`` hardware model (TPU v5e), at a measured
+        aggregate stream-step rate.  ``model`` counts the real (H, d)
+        cell's FLOPs; ``padded`` counts what the 128-lane MXU layout
+        actually issues — the gap is the padding tax the MXU trade
+        accepts to hit the systolic array."""
+        from repro.launch import roofline as rl
+        sw = self.sw
+        H, d = sw.hidden_dim, sw.input_dim
+        if sw.low_rank:
+            rw, ru = sw.w["W1"].shape[1], sw.w["U1"].shape[1]
+            mm = 2 * (d * rw + H * rw + H * ru + H * ru)
+        else:
+            mm = 2 * H * (d + H)
+        gates = 10 * H                       # gate combine + LUT indexing
+        flops = mm + gates
+        padded = 2 * 2 * HP * HP + 10 * HP   # two (hp, hp) contractions
+        # steady-state HBM traffic per stream-step: x in, h in + out
+        # (weights/LUTs are VMEM-resident for the whole dispatch)
+        bytes_per_step = 4 * (d + 2 * H)
+        achieved = flops * float(stream_steps_per_sec)
+        return {
+            "backend": self.backend,
+            "mxu": self.mxu,
+            "model_flops_per_stream_step": int(flops),
+            "padded_flops_per_stream_step": int(padded),
+            "hbm_bytes_per_stream_step": int(bytes_per_step),
+            "stream_steps_per_sec": float(stream_steps_per_sec),
+            "achieved_gflops": round(achieved / 1e9, 4),
+            "peak_fraction": achieved / rl.PEAK_FLOPS,
+            "memory_bound_stream_steps_per_sec": rl.HBM_BW / bytes_per_step,
+            "peak_flops": rl.PEAK_FLOPS,
+            "hbm_bw_bytes_per_sec": rl.HBM_BW,
+        }
 
     # -- one tick -----------------------------------------------------------
     def step(self, h, x, active):
@@ -189,20 +370,26 @@ class Q15StreamStep:
         return h
 
     def _build_jit(self):
-        arrs, sw, dev = self._jnp_arrs, self.sw, self.device
+        # the SAME executable as the resident path — any compilation
+        # difference (donation, extra wrapping) changes XLA's fusion
+        # choices by ~1 ulp and would break host-vs-device bit-identity.
+        # This host-staged path round-trips the full h table every tick
+        # — booked so stats()/fleet_bench can show the contrast with the
+        # zero-h-copy resident step.
+        dev, ledger, f = self.device, self.transfers, self._resident_step
 
-        @jax.jit
-        def f(h, x, active):
-            h_new = qstep.step_batched(jnp, arrs, sw, h, x)
-            return jnp.where(active[:, None], h_new, h)
+        def run(h, x, active):
+            ledger.h2d(x.nbytes + active.nbytes)
+            ledger.h2d(h.nbytes, state=True)
+            if dev is not None:
+                h, x, active = (jax.device_put(h, dev),
+                                jax.device_put(x, dev),
+                                jax.device_put(active, dev))
+            out = np.asarray(f(h, x, active))
+            ledger.d2h(out.nbytes, state=True)
+            return out
 
-        if dev is None:
-            return lambda h, x, active: np.asarray(f(h, x, active))
-        # committed inputs steer the compiled computation onto the shard's
-        # device (the closure constants above are already resident there)
-        return lambda h, x, active: np.asarray(
-            f(jax.device_put(h, dev), jax.device_put(x, dev),
-              jax.device_put(active, dev)))
+        return run
 
     def _step_pallas(self, h, x, active):
         S, H = h.shape
@@ -213,6 +400,10 @@ class Q15StreamStep:
         x_p[:S, :x.shape[1]] = x
         m_p = np.zeros((S + sp,), np.int32)
         m_p[:S] = active
+        # host-staged path: full padded h round-trip per tick (cf. the
+        # zero-h-copy device-resident step_resident)
+        self.transfers.h2d(x_p.nbytes + m_p.nbytes)
+        self.transfers.h2d(h_p.nbytes, state=True)
         if self.device is not None:
             args = (jax.device_put(x_p, self.device),
                     jax.device_put(h_p, self.device),
@@ -220,4 +411,6 @@ class Q15StreamStep:
         else:
             args = (jnp.asarray(x_p), jnp.asarray(h_p), jnp.asarray(m_p))
         h_new = self._pallas_step(*args)
-        return np.asarray(h_new)[:S, :H]
+        out = np.asarray(h_new)[:S, :H]
+        self.transfers.d2h(out.nbytes, state=True)
+        return out

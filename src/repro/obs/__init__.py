@@ -28,6 +28,7 @@ from .metrics import (BUCKET_EDGES_US, SNAPSHOT_SCHEMA_VERSION, Counter,
                       Gauge, Histogram, MetricsRegistry,
                       merge_histogram_counts, validate_snapshot)
 from .trace import NULL_TRACER, NullTracer, Tracer
+from .transfers import TRANSFER_KEYS, TransferLedger, sum_transfers
 
 
 @dataclasses.dataclass
@@ -78,6 +79,7 @@ __all__ = [
     "BUCKET_EDGES_US", "SNAPSHOT_SCHEMA_VERSION",
     "validate_snapshot", "merge_histogram_counts",
     "FlightRecorder", "DEFAULT_EVENTS_PER_SHARD",
+    "TransferLedger", "TRANSFER_KEYS", "sum_transfers",
     "check_conservation", "assert_conservation",
     "CONSERVED_WORKLOAD", "CONSERVED_SCHED",
 ]

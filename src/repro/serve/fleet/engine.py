@@ -109,6 +109,27 @@ class _SpillEntry:
     record_trajectory: bool
 
 
+@dataclasses.dataclass
+class _DeviceGroup:
+    """Fused-dispatch state of one device group (the co-located shards
+    whose ticks batch into ONE kernel call).  Each shard's ``_x`` is a
+    view of ``x_big``, so phase-1 ring gathers write the fused x operand
+    in place; ``h_big`` is last tick's fused output with per-shard views
+    handed back, adopted as this tick's h operand whenever every shard
+    still holds its view (steady state: zero copies besides the kernel's
+    own output — and on the device-resident path ``h_big`` is a jax
+    device array consumed in place by the step, so steady-state ticks
+    never move a single h byte across the host/device boundary)."""
+    device: Any
+    idxs: list                  # shard indices, fleet order
+    kernel: Q15StreamStep
+    offsets: np.ndarray         # (len(idxs)+1,) row offsets into the batch
+    x_big: np.ndarray           # (total, d) fused x staging
+    av_big: np.ndarray          # (total,) fused active-mask staging
+    h_big: Any = None           # last fused output (numpy or device array)
+    h_views: list = dataclasses.field(default_factory=list)
+
+
 class FleetEngine:
     """Sharded multi-stream serving: StreamingEngine semantics at fleet
     scale.  The public surface mirrors :class:`StreamingEngine`
@@ -148,18 +169,19 @@ class FleetEngine:
         # device groups for fused dispatch: co-located shards batch into
         # one kernel call per tick (keyed by device identity; None = the
         # process-local / default-device group)
-        groups: dict[Any, list[int]] = {}
-        for i, dev in enumerate(devices):
-            groups.setdefault(dev, []).append(i)
-        self._groups = groups
+        groups = placement.device_groups(devices)
         self._group_kernels = {
             dev: Q15StreamStep(self.qp, act_scales=act_scales,
                                naive_acts=naive_acts,
                                backend=config.stream.backend,
                                interpret=config.stream.interpret,
-                               device=dev)
-            for dev in groups}
+                               device=dev, mxu=config.stream.mxu)
+            for dev, _ in groups}
         self._devices = devices
+        # device-resident fused ticks: h lives on device between ticks
+        # and the fused step is an ASYNC dispatch (all shards' config is
+        # the template, so the resolved residency is uniform)
+        self._device_resident = self.shards[0]._device_resident
         self._owner: dict[str, int] = {}   # stream -> shard (incl. pending)
         self._spilled: "collections.OrderedDict[str, _SpillEntry]" = \
             collections.OrderedDict()      # fleet-level FIFO spillover
@@ -182,27 +204,34 @@ class FleetEngine:
         self._retired_sched = {k: 0 for k in (
             "admissions", "recycles", "spills", "completed", "cancelled",
             "evictions", "ticks")}
-        # --- fused-tick fast path (single device group) ----------------
-        # One (sum S_i, ...) buffer per kernel operand, with each shard's
-        # segment handed out as a view: shards write their gathered
-        # samples straight into the fused x operand (zero concat), and the
-        # fused step's output h is adopted back as next tick's input when
-        # no shard rebound its hidden state in between (steady state:
-        # zero copies besides the kernel's own output).
-        widths = [s.config.max_slots for s in self.shards]
-        self._offsets = np.concatenate([[0], np.cumsum(widths)])
-        self._h_big: np.ndarray | None = None
-        self._h_views: list = [None] * config.shards
-        if config.fuse_ticks and len(groups) == 1:
-            d = self.shards[0].kernel.input_dim
-            total = int(self._offsets[-1])
-            self._x_big = np.zeros((total, d), np.float32)
-            self._av_big = np.zeros(total, bool)
-            for i, sh in enumerate(self.shards):
-                sh._x = self._x_big[self._offsets[i]:self._offsets[i + 1]]
-        else:
-            self._x_big = None
-            self._av_big = None
+        from repro.obs import TRANSFER_KEYS
+        self._retired_transfers = dict.fromkeys(TRANSFER_KEYS, 0)
+        # --- fused-tick staging (one _DeviceGroup per device) ----------
+        # One (sum S_i, ...) buffer per kernel operand per group, with
+        # each shard's segment handed out as a view: phase-1 ring gathers
+        # write the fused x operand in place (zero concat), and the fused
+        # step's output h is adopted back as next tick's input when no
+        # shard rebound its hidden state in between.
+        d = self.shards[0].kernel.input_dim
+        self._group_list: list[_DeviceGroup] = []
+        self._group_of: dict[int, _DeviceGroup] = {}
+        for dev, idxs in groups:
+            widths = [self.shards[i].config.max_slots for i in idxs]
+            offs = np.concatenate([[0], np.cumsum(widths)])
+            g = _DeviceGroup(device=dev, idxs=list(idxs),
+                             kernel=self._group_kernels[dev], offsets=offs,
+                             x_big=np.zeros((int(offs[-1]), d), np.float32),
+                             av_big=np.zeros(int(offs[-1]), bool),
+                             h_views=[None] * len(idxs))
+            self._group_list.append(g)
+            for j, i in enumerate(idxs):
+                self._group_of[i] = g
+                if config.fuse_ticks:
+                    self.shards[i]._x = g.x_big[offs[j]:offs[j + 1]]
+        # device-resident fused outputs issued this tick and not yet
+        # waited on: the next tick syncs them (fleet.device_wait) BEFORE
+        # phase 1 overwrites the x/mask staging the dispatch aliased
+        self._inflight: list = []
         # per-tick SLO deadline (ns): the paper's real-time bar is one
         # sample period (50 Hz -> 20 ms); overridable via obs.deadline_ms
         deadline_ms = self.obs.deadline_ms
@@ -246,6 +275,20 @@ class FleetEngine:
             "fleet.failovers", "shard crash-failovers", wallclock=True)
         self._m_migrations = reg.counter(
             "fleet.migrations", "live stream migrations")
+        # host<->device transfer bytes (logical volume; deterministic):
+        # the steady-state fused tick on the device-resident path must
+        # add ZERO to the h_* pair — the measured zero-copy invariant
+        self._m_transfers = {
+            "h2d_bytes": reg.counter(
+                "fleet.h2d_bytes", "host->device bytes staged"),
+            "d2h_bytes": reg.counter(
+                "fleet.d2h_bytes", "device->host bytes pulled"),
+            "h_h2d_bytes": reg.counter(
+                "fleet.h_h2d_bytes", "hidden-state bytes uploaded"),
+            "h_d2h_bytes": reg.counter(
+                "fleet.h_d2h_bytes", "hidden-state bytes downloaded"),
+        }
+        self._last_transfers = self._transfer_totals()
 
     def _tick_metrics(self, dur_ns: int, events: list) -> None:
         """Per-tick SLO accounting: tick-latency histogram, 50 Hz
@@ -268,6 +311,12 @@ class FleetEngine:
         self._m_spilled.set(len(self._spilled))
         slots = self.max_streams
         self._m_occupancy.set(self.n_active / slots if slots else 0.0)
+        cur = self._transfer_totals()
+        for k, c in self._m_transfers.items():
+            delta = cur[k] - self._last_transfers[k]
+            if delta:
+                c.inc(delta)
+        self._last_transfers = cur
 
     def _note_shard_events(self, shard: int, evs: list) -> None:
         """Feed the flight recorder one shard's tick emission as compact
@@ -445,6 +494,19 @@ class FleetEngine:
 
     def _step_fused(self) -> list[StreamEvent]:
         tr = self._tracer
+        # phase 0 (device-resident only): sync last tick's dispatches.
+        # Everything between last tick's issue and here — bookkeeping,
+        # emission, delivery, the caller's own work — overlapped device
+        # compute (the double-buffer window).  The sync MUST precede
+        # phase 1: jax.device_put may alias the x/mask staging buffers
+        # instead of copying, so overwriting them while a dispatch still
+        # reads them corrupts the in-flight tick.
+        if self._inflight:
+            t0 = tr.t()
+            for arr in self._inflight:
+                arr.block_until_ready()
+            self._inflight.clear()
+            tr.rec("fleet.device_wait", t0)
         # phase 1: every shard runs admission + ring gather (no kernel)
         t0 = tr.t()
         begun: list[tuple] = []
@@ -458,13 +520,14 @@ class FleetEngine:
         # kernel: its gathered handle points at the dead engine's arrays
         for i in self._fire("mid_dispatch"):
             begun[i] = (None, None)
-        # phase 2: one batched kernel dispatch per device group
+        # phase 2: one batched kernel dispatch per device group.  On the
+        # device-resident path every group's dispatch is ISSUED before
+        # any is waited on — co-located shards batch, distinct devices
+        # compute concurrently.
         h_out: dict[int, np.ndarray] = {}
         t0 = tr.t()
-        if self._x_big is not None:
-            self._dispatch_single_group(begun, h_out)
-        else:
-            self._dispatch_groups(begun, h_out)
+        for g in self._group_list:
+            self._dispatch_group(g, begun, h_out)
         tr.rec("fleet.dispatch", t0)
         # phase 3: per-shard bookkeeping + scheduler release accounting
         t0 = tr.t()
@@ -485,65 +548,78 @@ class FleetEngine:
         tr.rec("fleet.finish", t0)
         return events
 
-    def _dispatch_single_group(self, begun: list, h_out: dict) -> None:
-        """Fused dispatch, zero-copy variant: every shard's ``_x`` is a
-        view of one (sum S_i, d) operand, the active mask is assembled in
-        a preallocated buffer, and last tick's fused output is adopted as
-        this tick's h operand when every shard still holds its view of it
-        (a shard rebinding ``_h`` — window reset, admission — falls back
-        to one concatenate)."""
-        n = len(self.shards)
-        live = [i for i in range(n) if begun[i][1] is not None]
+    def _dispatch_group(self, g: _DeviceGroup, begun: list,
+                        h_out: dict) -> None:
+        """One group's fused dispatch.  Host path: synchronous
+        ``step_rows`` over the fused operands (adopting last tick's
+        output as this tick's h when every shard still holds its view;
+        a shard rebinding ``_h`` — window reset, admission — falls back
+        to one concatenate).  Device-resident path: ``step_resident``
+        — an ASYNC dispatch that consumes the resident fused h, returns
+        immediately, and is synced by the NEXT tick's ``device_wait``;
+        per-shard h views are lazy device slices, so steady-state ticks
+        move zero h bytes through the host."""
+        idxs, off, tr = g.idxs, g.offsets, self._tracer
+        live = [i for i in idxs if begun[i][1] is not None]
         if not live:
             return
-        kern = next(iter(self._group_kernels.values()))
-        off = self._offsets
-        if len(live) == 1:
+        if not self._device_resident and len(live) == 1:
+            # host fast path: a lone advancing shard steps its own arrays
+            # (the exact backend computes only the active rows)
             i = live[0]
             sh, (avail, rows) = self.shards[i], begun[i][1]
-            h_out[i] = kern.step_rows(sh._h, sh._x, avail, rows)
-            self._h_big = None
+            h_out[i] = g.kernel.step_rows(sh._h, sh._x, avail, rows)
+            g.h_big = None
             return
-        av = self._av_big
-        if len(live) < n:
+        av = g.av_big
+        if len(live) < len(idxs):
             av[:] = False
-        for i in live:
-            av[off[i]:off[i + 1]] = begun[i][1][0]
-        if (self._h_big is not None and
-                all(self.shards[i]._h is self._h_views[i] for i in range(n))):
-            h_cat = self._h_big              # steady state: no copy at all
-        else:
-            h_cat = np.concatenate([sh._h for sh in self.shards])
-        h_new = kern.step_rows(h_cat, self._x_big, av, None)
-        self._h_big = h_new
-        for i in range(n):
-            view = h_new[off[i]:off[i + 1]]
-            self._h_views[i] = view
+        for j, i in enumerate(idxs):
+            if begun[i][1] is not None:
+                av[off[j]:off[j + 1]] = begun[i][1][0]
+        if self._device_resident:
+            # adoption token: every shard's lazy view spec still points
+            # at this group's last fused output (a shard that rebound
+            # its h — reset, admission, migration restore — cleared it)
+            adopted = (g.h_big is not None and
+                       all((p := self.shards[i]._h_pending) is not None
+                           and p[0] is g.h_big for i in idxs))
+            t0 = tr.t()
+            h_cat = (g.h_big if adopted
+                     else g.kernel.concat_device(
+                         [self.shards[i]._resolve_h() for i in idxs]))
+            h_new = g.kernel.step_resident(h_cat, g.x_big, av)
+            tr.rec("fleet.dispatch_issue", t0, idxs[0])
+            self._inflight.append(h_new)
+            g.h_big = h_new
+            # per-shard views are LAZY: a real device slice here costs
+            # one dispatch per shard per tick (~35% of a steady-state
+            # 1024-slot tick); instead each shard gets a provenance spec
+            # and materializes its slice only when it touches rows
+            # (emission, taps, snapshots, resets).  Idle shards' rows
+            # passed through the kernel masked (bit-preserved), so the
+            # same spec keeps their state current with no host traffic.
+            whole = h_new if len(idxs) == 1 else None
+            for j, i in enumerate(idxs):
+                sh = self.shards[i]
+                sh._h = whole
+                sh._h_pending = (h_new, off[j], off[j + 1])
+                g.h_views[j] = None
+                if i in live:
+                    h_out[i] = None
+            return
+        adopted = (g.h_big is not None and
+                   all(self.shards[i]._h is g.h_views[j]
+                       for j, i in enumerate(idxs)))
+        h_cat = (g.h_big if adopted    # steady state: no copy at all
+                 else np.concatenate([self.shards[i]._h for i in idxs]))
+        h_new = g.kernel.step_rows(h_cat, g.x_big, av, None)
+        g.h_big = h_new
+        for j, i in enumerate(idxs):
+            view = h_new[off[j]:off[j + 1]]
+            g.h_views[j] = view
             if i in live:
                 h_out[i] = view
-
-    def _dispatch_groups(self, begun: list, h_out: dict) -> None:
-        """Fused dispatch, one batched kernel call per device group
-        (shards placed on distinct jax devices)."""
-        for dev, idxs in self._groups.items():
-            live = [i for i in idxs if begun[i][1] is not None]
-            if not live:
-                continue
-            kern = self._group_kernels[dev]
-            if len(live) == 1:
-                i = live[0]
-                sh, (avail, rows) = self.shards[i], begun[i][1]
-                h_out[i] = kern.step_rows(sh._h, sh._x, avail, rows)
-                continue
-            h_cat = np.concatenate([self.shards[i]._h for i in live])
-            x_cat = np.concatenate([self.shards[i]._x for i in live])
-            av_cat = np.concatenate([begun[i][1][0] for i in live])
-            h_new = kern.step_rows(h_cat, x_cat, av_cat, None)
-            offset = 0
-            for i in live:
-                S = self.shards[i].config.max_slots
-                h_out[i] = h_new[offset:offset + S]
-                offset += S
 
     def drain(self) -> list[StreamEvent]:
         """Tick until no stream anywhere in the fleet can advance.  Open
@@ -649,6 +725,12 @@ class FleetEngine:
                 "FleetConfig(snapshot_every=N) to enable snapshots")
         stored = 0
         for i, shard in enumerate(self.shards):
+            # device-resident shards: pull every checkpointed resident
+            # slot's h in ONE batched gather instead of a device
+            # round-trip per stream (snapshot_stream then reads the
+            # identity-keyed cache)
+            shard.prefetch_h([s.slot for s in shard._sessions.values()
+                              if s.slot >= 0])
             for sid in list(shard._sessions):
                 blob = wire.encode_stream_state(shard.snapshot_stream(sid))
                 self._snapshots_taken += 1
@@ -690,11 +772,12 @@ class FleetEngine:
                    if o == shard and sid in self._journal]
         new = self._make_shard(old.config.device, shard)
         self.shards[shard] = new
-        if self._x_big is not None:   # rewire the fused-x view segment
-            new._x = self._x_big[self._offsets[shard]:
-                                 self._offsets[shard + 1]]
-        self._h_big = None            # fused-h adoption restarts from concat
-        self._h_views = [None] * len(self.shards)
+        g = self._group_of[shard]
+        if self.config.fuse_ticks:    # rewire the fused-x view segment
+            j = g.idxs.index(shard)
+            new._x = g.x_big[g.offsets[j]:g.offsets[j + 1]]
+        g.h_big = None                # fused-h adoption restarts from concat
+        g.h_views = [None] * len(g.idxs)
         replayed = 0
         wire_bytes = 0
         d = new.kernel.input_dim
@@ -783,6 +866,8 @@ class FleetEngine:
         sc = st["scheduler"]
         for k in self._retired_sched:
             self._retired_sched[k] += sc[k]
+        for k, v in st["transfers"].items():
+            self._retired_transfers[k] += v
 
     def shard_of(self, stream_id: str) -> int:
         """Current shard of a stream, or -1 while fleet-spilled."""
@@ -855,6 +940,8 @@ class FleetEngine:
             "devices": [str(d) if d is not None else "host"
                         for d in self._devices],
             "fuse_ticks": self.config.fuse_ticks,
+            "device_resident": self._device_resident,
+            "transfers": self._transfer_totals(),
             "max_streams": slots,
             "active": tot["active"],
             "pending": tot["pending"],
@@ -976,6 +1063,17 @@ class FleetEngine:
         if any(s._any_buffered() for s in self.shards):
             return True
         return any(e.chunks for e in self._spilled.values())
+
+    def _transfer_totals(self) -> dict[str, int]:
+        """Fleet-wide host<->device byte roll-up: every shard kernel's
+        ledger (unfused / standalone paths) plus every group kernel's
+        (fused dispatches).  The zero-copy regression gate reads the h
+        sub-accounts' per-tick delta from here."""
+        from repro.obs import sum_transfers
+        return sum_transfers(
+            [s.kernel.transfers.snapshot() for s in self.shards]
+            + [k.transfers.snapshot() for k in self._group_kernels.values()]
+            + [self._retired_transfers])
 
 
 def classify_windows_fleet(fleet: FleetEngine, windows: np.ndarray,

@@ -48,3 +48,15 @@ def shard_devices(n_shards: int, placement: str = "auto",
     if placement == "auto" and len(devs) < 2:
         return [None] * n_shards
     return [devs[i % len(devs)] for i in range(n_shards)]
+
+
+def device_groups(devices: list[Any]) -> list[tuple[Any, list[int]]]:
+    """Group shard indices by device identity, preserving shard order —
+    the fleet's fused tick makes ONE kernel dispatch per group and, on
+    the device-resident path, issues every group's dispatch before
+    waiting on any (``fleet.engine._step_fused``).  ``None`` (the
+    process-local fallback) is a single group."""
+    groups: dict[Any, list[int]] = {}
+    for i, dev in enumerate(devices):
+        groups.setdefault(dev, []).append(i)
+    return list(groups.items())

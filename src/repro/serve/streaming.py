@@ -73,8 +73,18 @@ class StreamingConfig:
     reset_on_emit: bool = True   # tumbling windows (matches QRuntime.predict)
     backend: str = "exact"       # "exact" | "jit" | "pallas"
     interpret: bool = True       # pallas backend: interpret mode (CPU)
+    mxu: bool = False            # pallas: 128-lane MXU matmul layout
     device: Any = None           # jax device for jit/pallas dispatch (fleet
     # shard placement); None = default device / process-local NumPy
+    device_resident: Any = "auto"   # keep the hidden-state table on device
+    # between ticks: steady-state ticks then move ZERO h bytes across the
+    # host/device boundary (only x + active-mask stage h2d; emission/tap/
+    # snapshot rows pull d2h on demand).  "auto" = yes for jit/pallas
+    # when the topology has real device parallelism (an accelerator or
+    # >1 device — see Q15StreamStep.device_state_profitable), never for
+    # exact — the bit-exact backend stays host NumPy.  True forces
+    # residency on any jit/pallas topology (the tests do, to pin the
+    # zero-copy contract on CPU); False forces the host-staged path.
     batch_events: bool = False   # emit one columnar StreamEventBatch per
     # tick instead of per-stream StreamEvent objects (the fleet-scale path)
     ring_capacity: int = 256     # initial per-slot sample ring (grows 2x)
@@ -214,9 +224,33 @@ class StreamingEngine:
                                     naive_acts=naive_acts,
                                     backend=config.backend,
                                     interpret=config.interpret,
-                                    device=config.device)
+                                    device=config.device,
+                                    mxu=config.mxu)
+        if config.device_resident == "auto":
+            self._device_resident = self.kernel.device_state_profitable
+        else:
+            self._device_resident = bool(config.device_resident)
+            if self._device_resident and not self.kernel.supports_device_state:
+                raise ValueError("device_resident=True requires the jit or "
+                                 "pallas backend (exact is host NumPy)")
         S, d = config.max_slots, self.kernel.input_dim
-        self._h = self.kernel.init_state(S)
+        self._h = (self.kernel.init_state_device(S) if self._device_resident
+                   else self.kernel.init_state(S))
+        self._h_inflight = False  # a step_resident dispatch is in flight:
+        # _advance_begin must sync before overwriting the _x staging buffer
+        # (jax.device_put may ALIAS host memory instead of copying, so
+        # mutating staging while the dispatch reads it corrupts the
+        # in-flight tick — measured, not hypothetical)
+        self._h_pending = None    # fleet-installed lazy h view: a
+        # (fused_h, lo, hi) provenance spec set by the fused device tick
+        # instead of an eager per-shard device slice (one slice dispatch
+        # per shard per tick ≈ 35% of a steady-state tick at 1024 slots).
+        # _resolve_h materializes it on first row-level access; any
+        # rebind of self._h to a fresh array must clear it (a stale spec
+        # would let the fleet adopt pre-rebind state)
+        self._h_prefetch = None   # identity-keyed (h, {slot: row}) one-shot
+        # cache for batched snapshot pulls; any step/reset rebinds self._h
+        # and invalidates it (device arrays are immutable)
         self._x = np.zeros((S, d), np.float32)
         # --- slot table (vectorized workload state) --------------------
         self._steps = np.zeros(S, np.int64)      # samples consumed
@@ -339,7 +373,7 @@ class StreamingEngine:
             parts += list(self._spill.get(slot, ()))
             return StreamState(
                 stream_id=stream_id,
-                h=self._h[slot].copy(),
+                h=self._h_row(slot),
                 steps=int(self._steps[slot]),
                 wstep=int(self._wstep[slot]),
                 total=None if self._total[slot] < 0 else int(self._total[slot]),
@@ -477,8 +511,12 @@ class StreamingEngine:
                     reset: bool) -> None:
         s.slot = slot
         if reset:  # recycled slot: zero the previous stream's hidden state
-            self._h = self.kernel.reset(
-                self._h, np.arange(self.config.max_slots) == slot)
+            mask = np.arange(self.config.max_slots) == slot
+            if self._device_resident:
+                self._h = self.kernel.reset_device(self._resolve_h(), mask)
+                self._h_pending = None
+            else:
+                self._h = self.kernel.reset(self._h, mask)
         self._steps[slot] = 0
         self._wstep[slot] = 0
         self._total[slot] = -1 if s.total is None else int(s.total)
@@ -490,9 +528,14 @@ class StreamingEngine:
         self._warm_seen[slot] = False
         if s.restore is not None:     # migrated-in stream: resume, don't reset
             h0, steps0, wstep0, suppress0 = s.restore
-            if not self._h.flags.writeable:   # jit/pallas outputs are
-                self._h = self._h.copy()      # read-only numpy views
-            self._h[slot] = h0
+            if self._device_resident:
+                self._h = self.kernel.set_rows_device(
+                    self._resolve_h(), np.array([slot]), h0[None])
+                self._h_pending = None
+            else:
+                if not self._h.flags.writeable:   # jit/pallas outputs are
+                    self._h = self._h.copy()      # read-only numpy views
+                self._h[slot] = h0
             self._steps[slot] = steps0
             self._wstep[slot] = wstep0
             self._suppress[slot] = suppress0
@@ -510,7 +553,16 @@ class StreamingEngine:
         avail, rows = handle
         tr = self._tracer
         t0 = tr.t()
-        h_new = self.kernel.step_rows(self._h, self._x, avail, rows)
+        if self._device_resident:
+            # async dispatch; self._h is consumed by the step.  The
+            # output is adopted immediately — emission/tap row pulls
+            # (and the staging sync at the top of the NEXT
+            # _advance_begin) are the only places the host waits on it.
+            h_new = self.kernel.step_resident(self._resolve_h(), self._x,
+                                              avail)
+            self._h_inflight = True
+        else:
+            h_new = self.kernel.step_rows(self._h, self._x, avail, rows)
         tr.rec("engine.kernel", t0, self._obs_shard)
         return self._advance_finish(handle, h_new)
 
@@ -521,6 +573,15 @@ class StreamingEngine:
         resident stream has a buffered sample.  Split from the kernel call
         so the fleet front door can batch every shard's step into one fused
         kernel dispatch per tick (see ``serve/fleet``)."""
+        if self._h_inflight:
+            # previous tick's device step may still be reading the _x
+            # staging buffer it aliased at device_put time — sync before
+            # the gather below overwrites it (the double-buffer boundary:
+            # everything since the last dispatch overlapped device compute)
+            t0 = self._tracer.t()
+            self._h.block_until_ready()
+            self._tracer.rec("engine.device_wait", t0, self._obs_shard)
+            self._h_inflight = False
         avail = resident & (self._tail > self._head)
         rows = np.nonzero(avail)[0]
         if rows.size == 0:
@@ -550,7 +611,11 @@ class StreamingEngine:
         avail, rows = handle
         t_fin = self._tracer.t()
         self._last_advanced = int(rows.size)
-        self._h = h_new
+        if h_new is not None:
+            self._h = h_new
+            self._h_pending = None
+        # h_new None: the fused fleet tick already installed this tick's
+        # output as a lazy view spec (see FleetEngine._dispatch_group)
         if rows.size == self._head.size:     # steady state: every slot moved
             self._head += 1
             self._steps += 1
@@ -564,9 +629,11 @@ class StreamingEngine:
             self._drain_spill()
 
         if self._n_taps and np.any(self._tap[rows]):
-            for i in np.nonzero(self._tap & avail)[0]:
-                sid = self._sched.request_at(i)
-                self._trajectories[sid].append(self._h[i].copy())
+            tap_rows = np.nonzero(self._tap & avail)[0]
+            vals = self._h_rows(tap_rows)
+            for i, slot in enumerate(tap_rows):
+                sid = self._sched.request_at(int(slot))
+                self._trajectories[sid].append(vals[i].copy())
 
         # emission: window boundaries + finished streams (rare -> loops)
         window = self.config.window
@@ -585,7 +652,7 @@ class StreamingEngine:
                 self._steps[emit_rows] > self._suppress[emit_rows]]
             self._replay_suppressed += int(emit_rows.size - deliver.size)
             if deliver.size:
-                logits = self.kernel.head_logits(self._h[deliver])
+                logits = self.kernel.head_logits(self._h_rows(deliver))
                 if self.config.batch_events:
                     events.append(self._event_batch(deliver, at_window,
                                                     logits))
@@ -601,7 +668,12 @@ class StreamingEngine:
             if np.any(at_window):
                 self._wstep[at_window] = 0
                 if self.config.reset_on_emit:
-                    self._h = self.kernel.reset(self._h, at_window)
+                    if self._device_resident:
+                        self._h = self.kernel.reset_device(
+                            self._resolve_h(), at_window)
+                        self._h_pending = None
+                    else:
+                        self._h = self.kernel.reset(self._h, at_window)
             self._tracer.rec("engine.emit", t_emit, self._obs_shard)
         self._tracer.rec("engine.finish", t_fin, self._obs_shard)
         return TickReport(events=events, finished=finished_rows,
@@ -637,7 +709,8 @@ class StreamingEngine:
         if reason == "cancelled" and self._wstep[slot] > 0:
             if self._steps[slot] > self._suppress[slot]:
                 # detach mid-window: emit the partial-window prediction
-                logits = self.kernel.head_logits(self._h[slot:slot + 1])[0]
+                logits = self.kernel.head_logits(
+                    self._h_rows(np.array([slot])))[0]
                 ev = self._event(stream_id, slot, "final",
                                  int(self._wstep[slot]), logits)
             else:
@@ -655,6 +728,54 @@ class StreamingEngine:
     # ------------------------------------------------------------------
     # Internals
     # ------------------------------------------------------------------
+    def _resolve_h(self):
+        """Materialize the fleet-installed lazy h view, if any.  Fused
+        device ticks hand each shard a ``(fused_h, lo, hi)`` spec instead
+        of dispatching a per-shard device slice every tick; the first
+        row-level access (emission, tap, snapshot, reset) pays the one
+        slice.  The spec survives materialization — it is the fleet's
+        adoption token — and is cleared only when ``self._h`` is rebound
+        to an array that is no longer a view of the fused output."""
+        if self._h is None:
+            big, lo, hi = self._h_pending
+            self._h = big[lo:hi]
+        return self._h
+
+    def _h_rows(self, rows) -> np.ndarray:
+        """Host values of the given hidden-state rows, backend-agnostic:
+        a plain fancy-index copy on the host path, a booked (k, H) d2h
+        pull on the device-resident path (only the rows the host actually
+        needs — emission, taps — ever cross the boundary)."""
+        if self._device_resident:
+            return self.kernel.rows_to_host(self._resolve_h(), rows)
+        return self._h[rows]
+
+    def _h_row(self, slot: int) -> np.ndarray:
+        """One hidden-state row as a fresh host copy (snapshot path).
+        Consults the :meth:`prefetch_h` cache so fleet-wide periodic
+        checkpoints cost one batched gather, not one device round-trip
+        per checkpointed stream."""
+        if self._device_resident:
+            cache = self._h_prefetch
+            if cache is not None and cache[0] is self._h and slot in cache[1]:
+                return cache[1][slot].copy()
+            return self.kernel.rows_to_host(self._resolve_h(),
+                                            np.array([slot]))[0]
+        return self._h[slot].copy()
+
+    def prefetch_h(self, slots) -> None:
+        """Batch-pull the given slots' hidden rows into a one-shot cache
+        keyed on the current device array's *identity* — any subsequent
+        step/reset rebinds ``self._h`` (device arrays are immutable) and
+        invalidates it automatically.  No-op on the host path, where the
+        rows are already resident."""
+        if not self._device_resident or len(slots) == 0:
+            return
+        rows = np.asarray(slots)
+        h = self._resolve_h()
+        vals = self.kernel.rows_to_host(h, rows)
+        self._h_prefetch = (h, {int(s): v for s, v in zip(rows, vals)})
+
     def _any_buffered(self) -> bool:
         if bool(np.any(self._sched.resident & (self._tail > self._head))):
             return True
@@ -760,6 +881,8 @@ class StreamingEngine:
         sched = self._sched.stats()
         return {
             "backend": self.config.backend,
+            "device_resident": self._device_resident,
+            "transfers": self.kernel.transfers.snapshot(),
             "max_slots": self.config.max_slots,
             "active": sched["active"],
             "pending": sched["pending"],
