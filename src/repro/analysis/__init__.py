@@ -1,0 +1,37 @@
+"""Static analysis for the repro stack, CI-gated.
+
+Two pillars (see ``docs/analysis.md`` for the full check catalog):
+
+* :mod:`repro.analysis.qlint` — an interval / bit-width abstract
+  interpreter over the integer step + head program shared by
+  ``repro.deploy.qvm`` and the emitted C (``repro.deploy.emit_c``),
+  seeded with the actual tensors of a packed :class:`DeployImage`.  It
+  *proves* every accumulator fits its declared width, every requant is
+  well-formed and overflow-free, every LUT index lands in the real
+  table — and classifies each saturation site as reachable or dead.
+* :mod:`repro.analysis.detlint` — an AST linter over ``src/repro``
+  encoding the determinism / bit-exactness rules this repo learned the
+  hard way (each check's docstring cites the motivating PR).
+
+``python -m repro.analysis`` runs both and emits one canonical-JSON
+``analysis_report`` artifact; ``--selftest`` runs the seeded-defect
+mutation fixtures (:mod:`repro.analysis.selftest`) that prove every
+check can fire.
+"""
+from .detlint import CHECK_IDS as DETLINT_CHECKS, lint_source, lint_tree
+from .intervals import Interval, WIDTH_RANGE
+from .qlint import (DEFAULT_WIDTHS, QLINT_CHECKS, Assumptions, Machine,
+                    analyze_image, reference_targets)
+from .report import (SCHEMA_VERSION, Finding, Suppression, build_report,
+                     dumps, write)
+from .selftest import FIXTURES, run_selftest
+
+__all__ = [
+    "Interval", "WIDTH_RANGE",
+    "Machine", "Assumptions", "analyze_image", "reference_targets",
+    "QLINT_CHECKS", "DEFAULT_WIDTHS",
+    "lint_tree", "lint_source", "DETLINT_CHECKS",
+    "Finding", "Suppression", "build_report", "dumps", "write",
+    "SCHEMA_VERSION",
+    "run_selftest", "FIXTURES",
+]

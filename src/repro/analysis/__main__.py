@@ -1,0 +1,87 @@
+"""CLI for the static-analysis gate.
+
+CI usage (``.github/workflows/ci.yml``, static-analysis job)::
+
+    python -m repro.analysis --fail-on-findings --report ANALYSIS_ci.json
+    python -m repro.analysis --selftest
+
+The report is canonical JSON with no wall-clock, host info, or floats —
+two runs over the same tree are byte-identical, so CI ``cmp``s the fresh
+report against the committed ``ANALYSIS_report.json``.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+
+from . import build_report, dumps, lint_tree, reference_targets, write
+from .selftest import run_selftest
+
+
+def main(argv: list[str] | None = None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description="Q15 integer-safety prover + determinism linter")
+    ap.add_argument("--report", metavar="PATH",
+                    help="write the analysis_report JSON artifact here")
+    ap.add_argument("--fail-on-findings", action="store_true",
+                    help="exit 1 when any finding survives suppression")
+    ap.add_argument("--qlint-only", action="store_true",
+                    help="skip the AST determinism linter")
+    ap.add_argument("--detlint-only", action="store_true",
+                    help="skip the interval prover (no artifact builds)")
+    ap.add_argument("--seeds", default="0",
+                    help="comma-separated reference-artifact seeds "
+                         "(default: 0)")
+    ap.add_argument("--selftest", action="store_true",
+                    help="run the seeded-defect mutation fixtures instead")
+    args = ap.parse_args(argv)
+
+    if args.selftest:
+        result = run_selftest()
+        for name, r in sorted(result["fixtures"].items()):
+            mark = "caught" if r["caught"] else "MISSED"
+            print(f"  {mark:>6}  {name}  [{r['expect']}]")
+        n = len(result["fixtures"])
+        ok = result["ok"]
+        print(f"selftest: {n} fixtures, "
+              f"{'all caught' if ok else 'DEFECTS MISSED'}")
+        return 0 if ok else 1
+
+    qlint_targets = []
+    if not args.detlint_only:
+        seeds = tuple(int(s) for s in args.seeds.split(",") if s.strip())
+        qlint_targets = reference_targets(seeds=seeds)
+    det = None if args.qlint_only else lint_tree()
+
+    report = build_report(qlint_targets, det)
+    if args.report:
+        write(report, args.report)
+    else:
+        sys.stdout.write(dumps(report))
+
+    s = report["summary"]
+    for t in qlint_targets:
+        status = "proved" if t["proved_overflow_free"] else "FAILED"
+        print(f"qlint: {t['name']}: {status} ({t['n_sites']} sites, "
+              f"{len(t['saturation']['reachable'])} reachable / "
+              f"{len(t['saturation']['dead'])} dead saturations)",
+              file=sys.stderr)
+    if det is not None:
+        print(f"detlint: {det['files']} files, "
+              f"{len(det['findings'])} findings, "
+              f"{len(det['suppressions'])} suppressions", file=sys.stderr)
+        for f in det["findings"]:
+            print(f"  {f['where']}: [{f['check']}] {f['message']}",
+                  file=sys.stderr)
+    for t in qlint_targets:
+        for f in t["findings"]:
+            print(f"  {t['name']}:{f['where']}: [{f['check']}] "
+                  f"{f['message']}", file=sys.stderr)
+    print(f"analysis: {s['findings']} findings, {s['suppressed']} "
+          f"suppressed, ok={s['ok']}", file=sys.stderr)
+    return 1 if (args.fail_on_findings and not s["ok"]) else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -27,6 +27,7 @@ from .invariants import (CONSERVED_SCHED, CONSERVED_WORKLOAD,
 from .metrics import (BUCKET_EDGES_US, SNAPSHOT_SCHEMA_VERSION, Counter,
                       Gauge, Histogram, MetricsRegistry,
                       merge_histogram_counts, validate_snapshot)
+from .phases import PHASES, assert_registered, registered
 from .trace import NULL_TRACER, NullTracer, Tracer
 from .transfers import TRANSFER_KEYS, TransferLedger, sum_transfers
 
@@ -82,4 +83,5 @@ __all__ = [
     "TransferLedger", "TRANSFER_KEYS", "sum_transfers",
     "check_conservation", "assert_conservation",
     "CONSERVED_WORKLOAD", "CONSERVED_SCHED",
+    "PHASES", "registered", "assert_registered",
 ]
