@@ -58,6 +58,7 @@ def build_cell(arch: str, shape_name: str, mesh):
         jf = jax.jit(step,
                      in_shardings=(n_params, n_opt, n_batch),
                      out_shardings=(n_params, n_opt, None),
+                     # detlint: ignore[det-donate-argnums] training step: params/opt buffers are consumed, no bit-exactness contract
                      donate_argnums=(0, 1))
         return jf, (aparams, aopt, batch_sds)
 
@@ -84,12 +85,14 @@ def build_cell(arch: str, shape_name: str, mesh):
                      in_shardings=(n_params, n_scales, n_cache,
                                    n_batch["tokens"]),
                      out_shardings=(None, n_cache),
+                     # detlint: ignore[det-donate-argnums] LM decode cache donation: compile-shape dryrun, not the FastGRNN serving path
                      donate_argnums=(2,))
         return jf, (qp, scales, acache, batch_sds["tokens"])
     step = registry.make_decode_step(cfg, shape, mesh=mesh, splitkv=splitkv)
     jf = jax.jit(step,
                  in_shardings=(n_params, n_cache, n_batch["tokens"]),
                  out_shardings=(None, n_cache),
+                 # detlint: ignore[det-donate-argnums] LM decode cache donation: compile-shape dryrun, not the FastGRNN serving path
                  donate_argnums=(1,))
     return jf, (aparams, acache, batch_sds["tokens"])
 
