@@ -68,7 +68,7 @@ def _cell_kernel(sig_lut_ref, tanh_lut_ref, x_ref, w_ref, u_ref,
     h_ref[...] = h
 
 
-@functools.partial(jax.jit, static_argnames=("T", "lo", "hi", "interpret"))
+@functools.partial(jax.jit, static_argnames=("T", "lo", "hi", "interpret"))  # detlint: ignore[det-jit-pallas] fixed window shapes (ops.py pads pre-call); resident path builds its own eager-pad wrapper
 def fastgrnn_window(sig_lut, tanh_lut, x, w_t, u_t, b_z, b_h, scal,
                     *, T: int, lo: float = -8.0, hi: float = 8.0,
                     interpret: bool = True):

@@ -39,7 +39,7 @@ def _mm_kernel(x_ref, w_ref, scale_ref, o_ref, acc_ref, *, n_k: int):
         o_ref[...] = (acc_ref[...] * scale_ref[0]).astype(o_ref.dtype)
 
 
-@functools.partial(jax.jit, static_argnames=("interpret", "out_dtype"))
+@functools.partial(jax.jit, static_argnames=("interpret", "out_dtype"))  # detlint: ignore[det-jit-pallas] fixed block-padded shapes (ops.py pads pre-call); tolerance-gated, not bit-exact
 def q15_matmul_padded(x, wq, scale, *, out_dtype=jnp.float32,
                       interpret: bool = True):
     """x: (M, K) bf16/f32; wq: (K, N) int8/int16; scale: (1,) f32.
