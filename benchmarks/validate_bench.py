@@ -93,6 +93,15 @@ SCHEMAS: dict[str, dict] = {
         "top": ["benchmark", "schema_version", "deterministic",
                 "counters", "gauges", "histograms"],
     },
+    # `python -m repro.analysis`: the static-analysis gate's report —
+    # qlint per-site proven bounds + detlint findings/suppressions.
+    # Deep-checked by _check_analysis_report below: per-target and
+    # per-site keys, finding/suppression shape, summary consistency.
+    "analysis_report": {
+        "top": ["benchmark", "schema_version", "qlint", "detlint",
+                "summary"],
+        "summary": ["findings", "suppressed", "ok"],
+    },
     # benchmarks/obs_bench.py: telemetry overhead budgets + tick-phase
     # breakdown + deadline-miss rate + flight-recorder byte stability.
     "obs_overhead": {
@@ -142,6 +151,64 @@ def _check_metrics_snapshot(record: dict, path: str,
                           f"{sum(counts)} != count {h.get('count')}")
 
 
+_TARGET_KEYS = ["name", "bits", "low_rank", "arch", "checks", "n_sites",
+                "sites", "saturation", "state_closed", "findings",
+                "proved_overflow_free"]
+_SITE_KEYS = ["site", "op", "declared_bits", "lo", "hi", "bits_needed",
+              "margin_bits"]
+
+
+def _check_analysis_report(record: dict, path: str,
+                           errors: list[str]) -> None:
+    """Deep checks for the repro.analysis report: every qlint target
+    carries a full per-site proof table, findings/suppressions are
+    well-formed, and the summary counts are consistent."""
+    targets = record.get("qlint", {}).get("targets")
+    if not isinstance(targets, list):
+        errors.append(f"{path}: qlint.targets must be a list")
+        return
+    n_findings = 0
+    for t in targets:
+        tname = t.get("name", "?")
+        for key in _TARGET_KEYS:
+            if key not in t:
+                errors.append(f"{path}: target {tname!r} missing {key!r}")
+        for i, s in enumerate(t.get("sites", [])):
+            for key in _SITE_KEYS:
+                if key not in s:
+                    errors.append(f"{path}: target {tname!r} sites[{i}] "
+                                  f"missing {key!r}")
+        n_findings += len(t.get("findings", []))
+        if t.get("proved_overflow_free") != (not t.get("findings")):
+            errors.append(f"{path}: target {tname!r} "
+                          f"proved_overflow_free inconsistent with its "
+                          f"findings list")
+    det = record.get("detlint", {})
+    n_suppressed = 0
+    if not det.get("skipped"):
+        for key in ("root", "files", "checks", "findings", "suppressions"):
+            if key not in det:
+                errors.append(f"{path}: detlint missing key {key!r}")
+        for f in det.get("findings", []):
+            if not all(k in f for k in ("check", "where", "message")):
+                errors.append(f"{path}: malformed detlint finding {f!r}")
+        for s in det.get("suppressions", []):
+            if not all(k in s for k in ("check", "where", "reason")):
+                errors.append(f"{path}: malformed suppression {s!r}")
+        n_findings += len(det.get("findings", []))
+        n_suppressed = len(det.get("suppressions", []))
+    summary = record.get("summary", {})
+    if summary.get("findings") != n_findings:
+        errors.append(f"{path}: summary.findings "
+                      f"{summary.get('findings')} != counted {n_findings}")
+    if summary.get("suppressed") != n_suppressed:
+        errors.append(f"{path}: summary.suppressed "
+                      f"{summary.get('suppressed')} != counted "
+                      f"{n_suppressed}")
+    if summary.get("ok") != (n_findings == 0):
+        errors.append(f"{path}: summary.ok inconsistent with findings")
+
+
 def _walk_numbers(obj, path, errors):
     if isinstance(obj, bool):
         return
@@ -174,8 +241,11 @@ def validate(path: str) -> tuple[str | None, list[str]]:
             errors.append(f"{path}: missing top-level key {key!r}")
     if kind == "metrics_snapshot" and not errors:
         _check_metrics_snapshot(record, path, errors)
+    if kind == "analysis_report" and not errors:
+        _check_analysis_report(record, path, errors)
     for sub in ("size", "capacity", "recovery", "baseline", "traced",
-                "budgets", "deadline", "flight_recorder", "kernel_roofline"):
+                "budgets", "deadline", "flight_recorder", "kernel_roofline",
+                "summary"):
         if sub not in schema:
             continue
         block = record.get(sub)

@@ -600,3 +600,56 @@ def test_lm_engine_obs_spans():
     snap = obs.metrics.snapshot()
     assert snap["counters"]["lm.tokens_generated"] == \
         eng.stats()["tokens_generated"] - 3   # prefill tokens not decode-counted
+
+
+# ---------------------------------------------------------------------------
+# span phase-name registry (repro.obs.phases)
+# ---------------------------------------------------------------------------
+
+def test_every_serving_span_phase_is_registered():
+    """Every phase literal recorded through the tracer API anywhere in
+    the serving and deploy trees must be registered in
+    repro.obs.phases.PHASES — a typo'd phase would silently intern a new
+    ring and split that phase's latency history (det-span-registry lints
+    the same property; this pins it from the runtime side)."""
+    import ast
+    import os
+    from repro.obs.phases import PHASES
+
+    src_root = os.path.join(os.path.dirname(__file__), "..", "src", "repro")
+    used = {}
+    for sub in ("serve", "deploy"):
+        for dirpath, _, files in os.walk(os.path.join(src_root, sub)):
+            for fn in sorted(files):
+                if not fn.endswith(".py"):
+                    continue
+                path = os.path.join(dirpath, fn)
+                with open(path) as f:
+                    tree = ast.parse(f.read(), filename=path)
+                for node in ast.walk(tree):
+                    if (isinstance(node, ast.Call)
+                            and isinstance(node.func, ast.Attribute)
+                            and node.func.attr in ("rec", "span")
+                            and node.args
+                            and isinstance(node.args[0], ast.Constant)
+                            and isinstance(node.args[0].value, str)):
+                        used.setdefault(node.args[0].value, []).append(
+                            f"{path}:{node.lineno}")
+    unregistered = {p: w for p, w in used.items() if p not in PHASES}
+    assert not unregistered, unregistered
+    # sanity: the scan actually sees the serving spans (an empty `used`
+    # would mean the extractor broke, not that the tree is clean)
+    assert {"fleet.tick", "engine.kernel", "lm.prefill"} <= set(used)
+
+
+def test_phase_registry_api():
+    from repro.obs import PHASES, assert_registered, registered
+    assert registered("fleet.dispatch") and not registered("fleet.dispach")
+    assert_registered("engine.tick")
+    with pytest.raises(ValueError):
+        assert_registered("engine.tick_typo")
+    # registry names are unique across subsystem groups and non-empty
+    from repro.obs import phases as P
+    groups = (P.ENGINE_PHASES + P.FLEET_PHASES + P.LM_PHASES
+              + P.SCHED_PHASES + P.VERIFY_PHASES)
+    assert len(groups) == len(set(groups)) == len(PHASES)

@@ -1,0 +1,214 @@
+"""qvm integer edge cases, pinned at the exact boundaries qlint proves.
+
+The abstract interpreter (``repro.analysis.qlint``) proves these
+behaviors over intervals; this module pins them concretely, value by
+value, and cross-checks the extreme inputs against the emitted-C twin:
+
+* int16 saturation at both boundaries from both sides (±32767, ∓32768);
+* the INT16_MIN negation hazard (the qvm computes the gate path in
+  int64, so ``-(-32768)`` is representable end-to-end);
+* requant round-shift extremes: ``sh=1``, ``sh=62``, the underflow form
+  ``m=0``, a nonzero floor preshift, and the too-large-factor rejection
+  (``quantize_multiplier`` never emits ``sh=0`` — the round constant
+  ``1 << (sh-1)`` requires ``sh >= 1``);
+* LUT index clamping to entries 0 and 255 at the fine-scale extremes.
+"""
+import tempfile
+
+import numpy as np
+import pytest
+
+from repro.core.lut import LUT_SIZE
+from repro.deploy import QVM, build_reference_model, emit_c
+from repro.deploy.qvm import (FINE_CLIP, I16_MAX, I16_MIN, Q15_ONE, Requant,
+                              _LUT_IDX0, quantize_multiplier, sat16)
+
+
+@pytest.fixture(scope="module")
+def model():
+    return build_reference_model(seed=0)
+
+
+@pytest.fixture(scope="module")
+def vm(model):
+    return QVM(model[2])
+
+
+# ---------------------------------------------------------------------------
+# int16 saturation boundaries
+# ---------------------------------------------------------------------------
+
+def test_sat16_exact_at_both_boundaries():
+    """One step past each boundary clamps; the boundary itself and one
+    step inside pass through untouched."""
+    v = np.array([I16_MIN - 1, I16_MIN, I16_MIN + 1,
+                  I16_MAX - 1, I16_MAX, I16_MAX + 1], np.int64)
+    np.testing.assert_array_equal(
+        sat16(v),
+        [I16_MIN, I16_MIN, I16_MIN + 1, I16_MAX - 1, I16_MAX, I16_MAX])
+
+
+def test_step_saturates_never_wraps(vm):
+    """Driving the recurrence with all four input/state extremes keeps
+    every stored state inside int16 — saturation, not wraparound (a wrap
+    would flip sign near the boundary)."""
+    H, d = vm.plan.H, vm.plan.d
+    for hval in (I16_MIN, I16_MAX):
+        for xval in (I16_MIN, I16_MAX):
+            hq = np.full((2, H), hval, np.int16)
+            xq = np.full((2, d), xval, np.int16)
+            out = vm.step(hq, xq)
+            assert out.dtype == np.int16
+            assert int(out.min()) >= I16_MIN and int(out.max()) <= I16_MAX
+
+
+# ---------------------------------------------------------------------------
+# INT16_MIN negation hazard
+# ---------------------------------------------------------------------------
+
+def test_int16_min_survives_gate_path(vm):
+    """h = -32768 everywhere: the gate terms ``(Q15_ONE - z)`` and
+    ``z * h`` are computed in int64 (where 32768 exists), so the step
+    must complete without wrap and the next state stays in range."""
+    H, d = vm.plan.H, vm.plan.d
+    hq = np.full((1, H), I16_MIN, np.int16)
+    out = vm.step(hq, np.zeros((1, d), np.int16))
+    assert out.dtype == np.int16
+    assert int(out.min()) >= I16_MIN and int(out.max()) <= I16_MAX
+    # the hazard itself, pinned: int64 negation of INT16_MIN is exact
+    assert -np.int64(I16_MIN) == 32768
+
+
+# ---------------------------------------------------------------------------
+# requant shift extremes
+# ---------------------------------------------------------------------------
+
+def test_requant_shift_floor_sh1():
+    """sh=1 is the minimum legal round shift: round-half-up at the
+    smallest rounding granularity, checked against exact integers."""
+    rq = Requant(m=1 << 24, sh=1, pre=0)
+    for acc in (0, 1, -1, 3, -3, 12345):
+        expect = (acc * (1 << 24) + 1) >> 1
+        expect = max(min(expect, (1 << 31) - 1), -(1 << 31))
+        assert int(rq.apply(np.int64(acc))) == expect
+
+
+def test_requant_shift_max_sh62():
+    """sh=62 is the maximum: a 2^37 accumulator with a 2^24 mantissa
+    lands exactly at the rounding boundary and resolves half-up to 1."""
+    rq = Requant(m=1 << 24, sh=62, pre=0)
+    assert int(rq.apply(np.int64(1 << 37))) == 1
+    assert int(rq.apply(np.int64((1 << 37) - 1))) == 0
+    assert int(rq.apply(np.int64(-(1 << 37)))) == 0   # round-half-up
+    assert int(rq.apply(np.int64(-(1 << 37) - 1))) == -1
+
+
+def test_requant_underflow_form_is_zero():
+    """A factor too small to represent collapses to m=0, sh=62 — the
+    documented underflow form maps every accumulator to 0."""
+    rq = quantize_multiplier(1e-20)
+    assert (rq.m, rq.sh) == (0, 62)
+    acc = np.array([0, 1, -1, 1 << 36, -(1 << 36)], np.int64)
+    np.testing.assert_array_equal(rq.apply(acc), 0)
+
+
+def test_requant_preshift_accuracy():
+    """acc_bits > 37 folds a floor preshift into the mantissa; the
+    represented factor must stay within the 2^-24 mantissa error."""
+    factor = 3.14159e-7
+    rq = quantize_multiplier(factor, acc_bits=45)
+    assert rq.pre == 8
+    acc = 1 << 44
+    got = int(rq.apply(np.int64(acc)))
+    assert abs(got - factor * acc) <= factor * acc * 2 ** -23 + 1
+
+
+def test_requant_rejects_oversized_factor_and_sh0():
+    """sh would go below 1 for a huge factor: rejected, never emitted —
+    the round constant ``1 << (sh-1)`` is meaningless at sh=0."""
+    with pytest.raises(ValueError):
+        quantize_multiplier(2.0 ** 30)
+    with pytest.raises(ValueError):
+        quantize_multiplier(-1.0)
+
+
+@pytest.mark.parametrize("bits", [15, 7])
+def test_plan_requants_well_formed(bits):
+    """Every requant a reference plan actually carries obeys the
+    gemmlowp contract qlint checks: m normalized (or the underflow
+    form), sh in [1, 62], pre >= 0."""
+    from repro.deploy.goldens import build_reference_artifact
+    from repro.deploy.image import build_image
+    from repro.deploy.qvm import plan_from_image
+    p = plan_from_image(build_image(
+        build_reference_artifact(seed=0, bits=bits)))
+    rqs = dict(p.rq)
+    rqs["gate"], rqs["hstore"] = p.rq_gate, p.rq_hstore
+    for name, rq in rqs.items():
+        assert rq.m == 0 or (1 << 24) <= rq.m < (1 << 25), name
+        assert 1 <= rq.sh <= 62, name
+        assert rq.pre >= 0, name
+
+
+# ---------------------------------------------------------------------------
+# LUT index extremes
+# ---------------------------------------------------------------------------
+
+def test_lut_index_clamps_to_0_and_255(vm):
+    """Fine-scale extremes land on table entries 0 and 255 exactly; the
+    zero input lands on the center bucket the index bias pins."""
+    p = vm.plan
+    lo = np.array([[-FINE_CLIP - 1]], np.int64)
+    hi = np.array([[FINE_CLIP]], np.int64)
+    zero = np.array([[0]], np.int64)
+    for table in (p.sig_lut, p.tanh_lut):
+        assert int(vm._lut(table, lo)[0, 0]) == int(table[0])
+        assert int(vm._lut(table, hi)[0, 0]) == int(table[LUT_SIZE - 1])
+        assert int(vm._lut(table, zero)[0, 0]) == int(table[_LUT_IDX0])
+    # the raw index arithmetic really does escape [0, 255] pre-clamp,
+    # i.e. the clamp is load-bearing at these inputs (qlint: "reachable")
+    raw_lo = (int(lo[0, 0]) * p.lut_m + (_LUT_IDX0 << p.lut_sh)) >> p.lut_sh
+    raw_hi = (int(hi[0, 0]) * p.lut_m + (_LUT_IDX0 << p.lut_sh)) >> p.lut_sh
+    assert raw_lo < 0 and raw_hi > LUT_SIZE - 1
+
+
+def test_sigmoid_tanh_monotone_tables(vm):
+    """The clamped lookup is monotone across the whole fine range —
+    a wrapped index would break monotonicity at the seam."""
+    p = vm.plan
+    v = np.linspace(-FINE_CLIP - 1, FINE_CLIP, 4097).astype(np.int64)[None]
+    for table in (p.sig_lut, p.tanh_lut):
+        y = vm._lut(table, v)[0]
+        assert (np.diff(y.astype(np.int64)) >= 0).all()
+
+
+# ---------------------------------------------------------------------------
+# extreme inputs against the emitted-C twin
+# ---------------------------------------------------------------------------
+
+@pytest.mark.skipif(emit_c.find_cc() is None, reason="no C compiler")
+def test_extreme_windows_bit_identical_to_c(model):
+    """The same edge inputs — both saturation boundaries, INT16_MIN
+    runs, alternating extremes — through the compiled int engine: traces
+    and logits must match the qvm byte for byte (the C has no saturating
+    hardware; divergence here is exactly the UB qlint exists to rule
+    out)."""
+    _, _, img = model
+    vm = QVM(img)
+    T, d = 16, img.d
+    xq = np.zeros((5, T, d), np.int16)
+    xq[0] = I16_MAX
+    xq[1] = I16_MIN
+    xq[2, :, ::2] = I16_MAX
+    xq[2, :, 1::2] = I16_MIN
+    xq[3, ::2] = I16_MIN
+    xq[3, 1::2] = I16_MAX
+    lg, traces = vm.run_windows(xq, return_trajectory=True)
+    assert int(traces.min()) >= I16_MIN and int(traces.max()) <= I16_MAX
+    with tempfile.TemporaryDirectory() as td:
+        binary = emit_c.compile_host(img, td, engine="int")
+        cm = emit_c.CHostModel(binary, img.H, img.C, engine="int")
+        ctr, clg, cpred = cm.trace(xq)
+    np.testing.assert_array_equal(ctr, traces)
+    np.testing.assert_array_equal(clg, lg)
+    np.testing.assert_array_equal(cpred, np.argmax(lg, axis=1))
