@@ -90,6 +90,10 @@ def main() -> None:
     ap.add_argument("--out", default="BENCH_deploy.json")
     ap.add_argument("--windows", type=int, default=512)
     ap.add_argument("--trained", action="store_true")
+    ap.add_argument("--metrics-out", default=None, metavar="PATH",
+                    help="also dump a metrics_snapshot JSON: bench "
+                         "counters/gauges plus the monitored qvm's "
+                         "numeric-health series over the same windows")
     args = ap.parse_args()
 
     if args.trained:
@@ -137,6 +141,23 @@ def main() -> None:
     with open(args.out, "w") as f:
         json.dump(record, f, indent=2)
     print(f"wrote {args.out}")
+    if args.metrics_out:
+        from repro.obs import MetricsRegistry
+        from repro.obs.numerics import NumericsMonitor
+        reg = MetricsRegistry()
+        reg.counter("bench.deploy.windows",
+                    "windows benched per engine path").inc(len(xq))
+        reg.gauge("bench.deploy.qvm.steps_per_sec", wallclock=True).set(
+            qvm_rows["stream_steps_per_sec"])
+        for r in c_rows:
+            reg.gauge(f"bench.deploy.c_{r['engine']}.steps_per_sec",
+                      wallclock=True).set(r["stream_steps_per_sec"])
+        mon = NumericsMonitor()
+        QVM(img, monitor=mon).run_windows(xq)
+        mon.publish(reg)
+        with open(args.metrics_out, "w") as f:
+            f.write(reg.dumps() + "\n")
+        print(f"wrote {args.metrics_out}")
     print(f"  qvm: {qvm_rows['stream_steps_per_sec']:,.0f} steps/s "
           f"({qvm_rows['realtime_streams_50hz']:,} live 50 Hz sensors)")
     for r in c_rows:

@@ -38,14 +38,15 @@ from repro.serve.fleet import FleetConfig, FleetEngine
 from repro.serve.streaming import StreamingConfig
 
 
-def _build(qp, args) -> FleetEngine:
+def _build(qp, args, obs=None) -> FleetEngine:
     stream = StreamingConfig(
         max_slots=args.slots_per_shard, backend=args.backend,
         batch_events=True, ring_capacity=args.samples,
         max_ring_capacity=args.samples)
     return FleetEngine(qp, FleetConfig(
         shards=args.shards, stream=stream, max_pending_per_shard=0,
-        placement="host", snapshot_every=args.snapshot_every))
+        placement="host", snapshot_every=args.snapshot_every),
+        obs=obs)
 
 
 def _fill(fleet: FleetEngine, src: np.ndarray, n_streams: int,
@@ -56,8 +57,8 @@ def _fill(fleet: FleetEngine, src: np.ndarray, n_streams: int,
         fleet.feed(f"s{i}", np.tile(src[i % len(src)], (reps, 1))[:samples])
 
 
-def _one_rep(qp, src, args, rep: int) -> dict:
-    fleet = _build(qp, args)
+def _one_rep(qp, src, args, rep: int, obs=None) -> dict:
+    fleet = _build(qp, args, obs=obs)
     n_streams = args.shards * args.slots_per_shard
     _fill(fleet, src, n_streams, args.samples)
     for _ in range(args.ticks_before):           # reach steady state (the
@@ -103,6 +104,10 @@ def main() -> None:
     parser.add_argument("--reps", type=int, default=5)
     parser.add_argument("--smoke", action="store_true",
                         help="CI configuration: tiny fleet, 2 reps")
+    parser.add_argument("--metrics-out", default=None, metavar="PATH",
+                        help="also dump a metrics_snapshot JSON: the "
+                             "fleet's registry (tick/crash series plus "
+                             "numeric-health counters) across all reps")
     args = parser.parse_args()
     if args.smoke:
         args.slots_per_shard, args.samples = 256, 64
@@ -113,9 +118,16 @@ def main() -> None:
                          QuantConfig())
     src = hapt.load("test", n=256).windows
 
+    obs = None
+    if args.metrics_out:
+        from repro.obs import MetricsRegistry, Observability
+        from repro.obs.numerics import NumericsMonitor
+        obs = Observability(metrics=MetricsRegistry(),
+                            numerics=NumericsMonitor())
+
     rows = []
     for rep in range(args.reps):
-        row = _one_rep(qp, src, args, rep)
+        row = _one_rep(qp, src, args, rep, obs=obs)
         rows.append(row)
         print(f"rep {rep}: snapshot {row['snapshot_ms']:8.1f} ms   "
               f"crash+recover {row['recovery_ms']:8.1f} ms   "
@@ -158,6 +170,10 @@ def main() -> None:
     with open(args.out, "w") as f:
         json.dump(record, f, indent=2)
     print(f"wrote {args.out}")
+    if obs is not None:
+        with open(args.metrics_out, "w") as f:
+            f.write(obs.metrics.dumps() + "\n")
+        print(f"wrote {args.metrics_out}")
 
 
 if __name__ == "__main__":

@@ -102,6 +102,27 @@ SCHEMAS: dict[str, dict] = {
                 "summary"],
         "summary": ["findings", "suppressed", "ok"],
     },
+    # benchmarks/numerics_bench.py: numeric-health monitor overhead
+    # budget, qvm<->C saturation-counter parity (incl. the stress
+    # witness), the drift-injection demo, and the static/dynamic
+    # saturation cross-check verdict.
+    "numerics_health": {
+        "top": ["benchmark", "model", "backend", "host", "config",
+                "overhead", "budgets", "counter_parity", "drift_demo",
+                "crosscheck"],
+        "overhead": ["baseline_steps_per_sec", "null_steps_per_sec",
+                     "monitored_steps_per_sec", "null_overhead_pct",
+                     "monitored_overhead_pct", "monitor_marginal_pct",
+                     "measured_noise_pct"],
+        "budgets": ["monitored_budget_pct", "monitored_within_budget",
+                    "null_budget_pct", "null_within_noise"],
+        "counter_parity": ["windows", "stress_gain", "available",
+                           "counters_equal", "preds_equal",
+                           "stress_counters_equal", "stress_h_next"],
+        "drift_demo": ["scales", "drift_scores", "monotone"],
+        "crosscheck": ["ok", "violations", "witnessed",
+                       "unwitnessed_reachable"],
+    },
     # benchmarks/obs_bench.py: telemetry overhead budgets + tick-phase
     # breakdown + deadline-miss rate + flight-recorder byte stability.
     "obs_overhead": {
@@ -245,7 +266,8 @@ def validate(path: str) -> tuple[str | None, list[str]]:
         _check_analysis_report(record, path, errors)
     for sub in ("size", "capacity", "recovery", "baseline", "traced",
                 "budgets", "deadline", "flight_recorder", "kernel_roofline",
-                "summary"):
+                "summary", "overhead", "counter_parity", "drift_demo",
+                "crosscheck"):
         if sub not in schema:
             continue
         block = record.get(sub)

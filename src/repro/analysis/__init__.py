@@ -18,6 +18,7 @@ Two pillars (see ``docs/analysis.md`` for the full check catalog):
 mutation fixtures (:mod:`repro.analysis.selftest`) that prove every
 check can fire.
 """
+from .crosscheck import crosscheck, target_by_name
 from .detlint import CHECK_IDS as DETLINT_CHECKS, lint_source, lint_tree
 from .intervals import Interval, WIDTH_RANGE
 from .qlint import (DEFAULT_WIDTHS, QLINT_CHECKS, Assumptions, Machine,
@@ -34,4 +35,5 @@ __all__ = [
     "Finding", "Suppression", "build_report", "dumps", "write",
     "SCHEMA_VERSION",
     "run_selftest", "FIXTURES",
+    "crosscheck", "target_by_name",
 ]

@@ -4,6 +4,14 @@ CI usage (``.github/workflows/ci.yml``, static-analysis job)::
 
     python -m repro.analysis --fail-on-findings --report ANALYSIS_ci.json
     python -m repro.analysis --selftest
+    python -m repro.analysis --crosscheck
+
+``--crosscheck`` closes the static/dynamic loop: it rebuilds the
+reference Q15 and Q7 images, runs the *monitored* qvm over the golden
+windows (plus a x8 input-amplified stress segment that must witness
+``h_next`` saturation), and checks every runtime counter against the
+fresh qlint reachability classification via
+:func:`repro.analysis.crosscheck.crosscheck`.
 
 The report is canonical JSON with no wall-clock, host info, or floats —
 two runs over the same tree are byte-identical, so CI ``cmp``s the fresh
@@ -14,8 +22,63 @@ from __future__ import annotations
 import argparse
 import sys
 
-from . import build_report, dumps, lint_tree, reference_targets, write
+from . import build_report, crosscheck, dumps, lint_tree, reference_targets, \
+    write
 from .selftest import run_selftest
+
+#: Input gain for the saturation-stress crosscheck segment: x8 drives the
+#: reference model's post-gate state outside int16 (``h_next`` fires) while
+#: every matvec/LUT site stays within its proven bounds.
+STRESS_GAIN = 8
+
+
+def run_crosscheck(seeds: tuple[int, ...] = (0,),
+                   n_windows: int = 64) -> int:
+    """Live static/dynamic cross-check over the reference images.
+
+    For each (seed, bits) reference build: analyze the image (fresh
+    qlint reachability), then run the monitored qvm over the golden
+    test windows twice — unmodified, and input-amplified by
+    :data:`STRESS_GAIN` with ``expect_nonzero=("h_next",)`` so a
+    silently-dead counter pipeline fails the gate rather than passing
+    vacuously.  Exit 0 iff every segment's witnesses are contained in
+    the statically reachable site set."""
+    import numpy as np
+
+    from repro.data import hapt
+    from repro.deploy.goldens import build_reference_artifact
+    from repro.deploy.image import build_image
+    from repro.deploy.qvm import QVM
+    from repro.obs.numerics import NumericsMonitor
+    from .qlint import analyze_image
+
+    windows = hapt.load("test", n=n_windows).windows
+    ok = True
+    for seed in seeds:
+        for bits, label in ((15, "q15"), (7, "q7")):
+            art = build_reference_artifact(seed=seed, bits=bits)
+            img = build_image(art)
+            target = analyze_image(img, name=f"reference-{label}-s{seed}")
+            for segment, gain, expect in (
+                    ("golden", 1, ()),
+                    ("stress", STRESS_GAIN, ("h_next",))):
+                mon = NumericsMonitor()
+                vm = QVM(img, monitor=mon)
+                vm.run_windows(vm.quantize_input(
+                    np.asarray(windows, np.float32) * gain))
+                verdict = crosscheck(target, mon.snapshot(),
+                                     expect_nonzero=expect)
+                ok = ok and verdict["ok"]
+                wit = ", ".join(verdict["witnessed"]) or "none"
+                print(f"crosscheck: {target['name']} [{segment}]: "
+                      f"{'ok' if verdict['ok'] else 'VIOLATION'} "
+                      f"(witnessed: {wit}; unwitnessed reachable: "
+                      f"{len(verdict['unwitnessed_reachable'])})",
+                      file=sys.stderr)
+                for v in verdict["violations"]:
+                    print(f"  {v}", file=sys.stderr)
+    print(f"crosscheck: {'ok' if ok else 'FAILED'}", file=sys.stderr)
+    return 0 if ok else 1
 
 
 def main(argv: list[str] | None = None) -> int:
@@ -35,7 +98,16 @@ def main(argv: list[str] | None = None) -> int:
                          "(default: 0)")
     ap.add_argument("--selftest", action="store_true",
                     help="run the seeded-defect mutation fixtures instead")
+    ap.add_argument("--crosscheck", action="store_true",
+                    help="run the static/dynamic saturation cross-check "
+                         "on the reference images instead")
+    ap.add_argument("--windows", type=int, default=64, metavar="N",
+                    help="golden windows per crosscheck run (default: 64)")
     args = ap.parse_args(argv)
+
+    if args.crosscheck:
+        seeds = tuple(int(s) for s in args.seeds.split(",") if s.strip())
+        return run_crosscheck(seeds=seeds, n_windows=args.windows)
 
     if args.selftest:
         result = run_selftest()

@@ -76,6 +76,13 @@ class Requant:
     sh: int
     pre: int = 0
 
+    def raw(self, acc: np.ndarray) -> np.ndarray:
+        """The rescaled int64 value BEFORE the int32 saturation — the
+        monitored path reads this to count ``*.out`` saturation events
+        without changing the applied result."""
+        acc = np.asarray(acc).astype(np.int64) >> self.pre
+        return (acc * self.m + (1 << (self.sh - 1))) >> self.sh
+
     def apply(self, acc: np.ndarray) -> np.ndarray:
         """((acc >> pre) * m + half) >> sh on int64, round-half-up,
         arithmetic shifts (numpy and C agree on negative operands).
@@ -83,9 +90,7 @@ class Requant:
         and without the clip a pathological gate product (tiny calibrated
         h scale + saturating inputs) would wrap there but not here,
         breaking the bit-exact C/qvm contract."""
-        acc = np.asarray(acc).astype(np.int64) >> self.pre
-        out = (acc * self.m + (1 << (self.sh - 1))) >> self.sh
-        return np.clip(out, -(1 << 31), (1 << 31) - 1)
+        return np.clip(self.raw(acc), -(1 << 31), (1 << 31) - 1)
 
 
 def quantize_multiplier(factor: float, acc_bits: int = 37) -> Requant:
@@ -221,18 +226,43 @@ def plan_from_image(img: DeployImage) -> QuantPlan:
         s_logits_q=float(s_headw * s_h * (1 << logit_sh)))
 
 
+def _count_outside(v: np.ndarray, lo: int, hi: int) -> int:
+    """Number of elements strictly outside [lo, hi] — the shared counting
+    semantic of every saturation site (qvm, C and kernel monitors must
+    agree on this definition for the parity gates to hold)."""
+    return int(np.count_nonzero((v < lo) | (v > hi)))
+
+
 class QVM:
     """Batched pure-integer executor.  State is (B, H) int16; every public
-    method except :meth:`quantize_input` is integer-only."""
+    method except :meth:`quantize_input` is integer-only.
 
-    def __init__(self, img: DeployImage):
+    ``monitor``: optional :class:`repro.obs.numerics.NumericsMonitor` —
+    counts saturation/clamp events per analyzer site ID and observes
+    pre-activation / hidden ranges at their real (dequantized) scales.
+    The monitored path only *reads* intermediates; outputs are
+    byte-identical with and without a monitor (test-gated)."""
+
+    def __init__(self, img: DeployImage, monitor=None):
         self.img = img
         self.plan = plan_from_image(img)
+        self.monitor = monitor
+        if monitor is not None:
+            from repro.obs.numerics import site_order
+            monitor.declare(site_order(self.plan.low_rank))
+            monitor.set_default_limits({
+                "x": self.plan.s_x * Q15_ONE,
+                "pre": float(img.act_scales["pre"]) * Q15_ONE,
+                "h": self.plan.s_h * Q15_ONE,
+            })
 
     # -- boundary (the ADC): float -> Q15, OUTSIDE the hot loop ----------
     def quantize_input(self, x: np.ndarray) -> np.ndarray:
         """(..., d) float samples -> int16 at the calibrated input scale."""
-        q = np.round(np.asarray(x, np.float64) / self.plan.s_x)
+        x = np.asarray(x, np.float64)
+        if self.monitor is not None:
+            self.monitor.observe("x", x)
+        q = np.round(x / self.plan.s_x)
         return sat16(q).astype(np.int16)
 
     def dequantize_input(self, xq: np.ndarray) -> np.ndarray:
@@ -249,15 +279,27 @@ class QVM:
         (exact: integer addition is associative, so numpy's sum order is
         irrelevant)."""
         acc = vq.astype(np.int64) @ wq.T        # (B, m)
-        return np.clip(self.plan.rq[name].apply(acc), -FINE_CLIP - 1, FINE_CLIP)
+        rq = self.plan.rq[name]
+        if self.monitor is None:
+            return np.clip(rq.apply(acc), -FINE_CLIP - 1, FINE_CLIP)
+        raw = rq.raw(acc)
+        self.monitor.count(f"{name}.out",
+                           _count_outside(raw, -(1 << 31), (1 << 31) - 1))
+        v32 = np.clip(raw, -(1 << 31), (1 << 31) - 1)
+        self.monitor.count(f"{name}.fine",
+                           _count_outside(v32, -FINE_CLIP - 1, FINE_CLIP))
+        return np.clip(v32, -FINE_CLIP - 1, FINE_CLIP)
 
-    def _lut(self, table: np.ndarray, vq: np.ndarray) -> np.ndarray:
+    def _lut(self, table: np.ndarray, vq: np.ndarray,
+             site: str | None = None) -> np.ndarray:
         """Nearest-bucket lookup from a fine-pre-scale int value: one
         integer multiply+shift, then clip to the table (saturating the ±8
         tails — identical to the float engine's boundary handling)."""
         p = self.plan
         idx = (vq.astype(np.int64) * p.lut_m
                + (_LUT_IDX0 << p.lut_sh)) >> p.lut_sh
+        if self.monitor is not None and site is not None:
+            self.monitor.count(site, _count_outside(idx, 0, LUT_SIZE - 1))
         return table[np.clip(idx, 0, LUT_SIZE - 1)]
 
     def step(self, hq: np.ndarray, xq: np.ndarray) -> np.ndarray:
@@ -274,17 +316,41 @@ class QVM:
             wx = self._matvec("w", p.w["W"], xq)
             uh = self._matvec("u", p.w["U"], hq64)
         pre = wx + uh                                         # int32, fine
-        zq = self._lut(p.sig_lut, pre + p.bz_q)               # (B,H) unit Q15
-        htq = self._lut(p.tanh_lut, pre + p.bh_q)
+        zq = self._lut(p.sig_lut, pre + p.bz_q, "act.z.idx")  # (B,H) unit Q15
+        htq = self._lut(p.tanh_lut, pre + p.bh_q, "act.ht.idx")
         # gate combine at product scale, ONE store-rounding into int16 h:
         #   h' = (zeta*(1-z) + nu) * h~ + z*h
         g2 = p.zeta_q * (Q15_ONE - zq) + p.nu2_q              # unit^2
-        a_f = p.rq_gate.apply(g2 * htq)                       # F = s_h/Q15
+        gate_acc = g2 * htq
+        if self.monitor is None:
+            a_f = p.rq_gate.apply(gate_acc)                   # F = s_h/Q15
+        else:
+            raw = p.rq_gate.raw(gate_acc)
+            self.monitor.count(
+                "gate.out", _count_outside(raw, -(1 << 31), (1 << 31) - 1))
+            a_f = np.clip(raw, -(1 << 31), (1 << 31) - 1)
         h_f = a_f + zq * hq64                                 # F (z*h exact)
         # clip at ±2^31: beyond the int16 saturation threshold in F units
         # (2^30), so semantically inert — it only bounds the requant input
+        if self.monitor is not None:
+            self.monitor.count(
+                "gate.hf_clip",
+                _count_outside(h_f, -(1 << 31), (1 << 31) - 1))
         h_f = np.clip(h_f, -(1 << 31), (1 << 31) - 1)
-        h_new = sat16(p.rq_hstore.apply(h_f))                 # s_h, int16
+        if self.monitor is None:
+            h_new = sat16(p.rq_hstore.apply(h_f))             # s_h, int16
+        else:
+            raw = p.rq_hstore.raw(h_f)
+            self.monitor.count(
+                "hstore.out", _count_outside(raw, -(1 << 31), (1 << 31) - 1))
+            v32 = np.clip(raw, -(1 << 31), (1 << 31) - 1)
+            self.monitor.count("h_next", _count_outside(v32, I16_MIN, I16_MAX))
+            h_new = sat16(v32)
+            # activation-range telemetry at real (dequantized) scales
+            s_pref = self.img.act_scales["pre"] / (1 << FINE_SHIFT)
+            pre_real = pre.astype(np.float64) * s_pref
+            self.monitor.observe("pre", pre_real)
+            self.monitor.observe("h", h_new.astype(np.float64) * p.s_h)
         return h_new.astype(np.int16)
 
     def logits(self, hq: np.ndarray) -> np.ndarray:
@@ -292,6 +358,9 @@ class QVM:
         p = self.plan
         acc = hq.astype(np.int64) @ p.w["head_w"]             # (B, C)
         out = (acc >> p.logit_sh) + p.headb_q
+        if self.monitor is not None:
+            self.monitor.count(
+                "head.logits", _count_outside(out, -(1 << 31), (1 << 31) - 1))
         return out.astype(np.int32)
 
     # -- window/batch drivers ---------------------------------------------

@@ -145,6 +145,7 @@ def run_parity(img, qp=None, windows: np.ndarray | None = None, *,
         with tr.span("verify.fp32"):
             preds["fp32"] = _fp32_predict(qp, xdeq)
 
+    numerics: dict[str, Any] | None = None
     if use_c and find_cc():
         with tempfile.TemporaryDirectory() as td:
             with tr.span("verify.cc_build"):
@@ -167,6 +168,36 @@ def run_parity(img, qp=None, windows: np.ndarray | None = None, *,
             # integer path: compiled C == emulator, bit for bit
             bitwise["c_int_qvm_traces"] = bool(np.array_equal(itr, qvm_traces))
             bitwise["c_int_qvm_logits"] = bool(np.array_equal(ilg, qvm_logits))
+            # numeric-health loop closure: the counter-instrumented C
+            # build must (a) predict byte-identically to the plain int
+            # build and (b) report exactly the per-site saturation
+            # counts the monitored qvm sees on the same sensor windows;
+            # the witnesses must then pass the static reachability
+            # cross-check (dynamic \subseteq statically reachable).
+            with tr.span("verify.numerics"):
+                from repro.analysis import crosscheck as _crosscheck
+                from repro.analysis.qlint import analyze_image
+                from repro.obs.numerics import NumericsMonitor, site_order
+                bin_nc = compile_host(img, td + "/nc", engine="int",
+                                      numeric_counters=True)
+                cnc = CHostModel(bin_nc, img.H, img.C, engine="int")
+                nc_preds, c_counts = cnc.counters(xq)
+                mon = NumericsMonitor()
+                QVM(img, monitor=mon).run_windows(xq)
+                snap = mon.snapshot()
+                order = site_order(bool(img.low_rank))
+                qvm_counts = np.array([snap["sites"][s] for s in order],
+                                      np.uint64)
+                bitwise["c_int_qvm_counters"] = bool(
+                    np.array_equal(nc_preds, preds["c_int"])
+                    and np.array_equal(c_counts, qvm_counts))
+                verdict = _crosscheck(analyze_image(img, name="verify"),
+                                      snap)
+                bitwise["numerics_crosscheck"] = bool(verdict["ok"])
+                numerics = {
+                    "sites": dict(snap["sites"]),
+                    "crosscheck": verdict,
+                }
 
     ref = preds["engine"]
     n = len(windows)
@@ -210,6 +241,8 @@ def run_parity(img, qp=None, windows: np.ndarray | None = None, *,
                       and name != "verify.total"},
         "total_s": round(tr.rec("verify.total", t_total) / 1e9, 3),
     }
+    if numerics is not None:
+        report["numerics"] = numerics
     if provenance is not None:
         report["provenance"] = provenance
     return report

@@ -117,6 +117,13 @@ class Q15StreamStep:
         # process-local NumPy and ignores it.
         self.device = device if backend != "exact" else None
         self._np_arrs = self.sw.arrays(np)
+        # Numeric-health seam (repro.obs.numerics): when an engine sets
+        # this to a mutable dict, the exact backend's gathered step tallies
+        # LUT-saturation / pre-range events into it from intermediates it
+        # materializes anyway (zero extra FP work, byte-identical output).
+        # The jit/pallas dispatches are never touched — monitored runs on
+        # those backends call :meth:`tally_numeric_events` instead.
+        self.numeric_events = None
         self._resident_step = None
         if backend == "exact":
             self._step = self._step_exact
@@ -366,8 +373,25 @@ class Q15StreamStep:
             return np.asarray(h, np.float32)
         h = np.asarray(h, np.float32).copy()
         h[rows] = qstep.step_batched(np, self._np_arrs, self.sw,
-                                     h[rows], np.asarray(x, np.float32)[rows])
+                                     h[rows], np.asarray(x, np.float32)[rows],
+                                     events=self.numeric_events)
         return h
+
+    def tally_numeric_events(self, h, x, rows) -> None:
+        """Numeric-health tallies for the jit/pallas backends: recompute
+        the advanced rows' step on the host NumPy path purely to observe
+        its intermediates (``repro.obs.numerics``), discarding the result.
+        The accelerated dispatch itself is never modified, so monitored
+        and unmonitored runs stay byte-identical by construction; the
+        recompute cost is the price of watching an opaque executable and
+        is why monitoring defaults off.  Exact-backend callers never need
+        this — ``step_rows`` tallies inline for free."""
+        if self.numeric_events is None or rows is None or len(rows) == 0:
+            return
+        qstep.step_batched(np, self._np_arrs, self.sw,
+                           np.asarray(h, np.float32)[np.asarray(rows)],
+                           np.asarray(x, np.float32)[np.asarray(rows)],
+                           events=self.numeric_events)
 
     def _build_jit(self):
         # the SAME executable as the resident path — any compilation

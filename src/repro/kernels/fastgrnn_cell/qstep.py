@@ -146,10 +146,71 @@ def store_batched(xp, t, scale):
     return (q * scale).astype(xp.float32)
 
 
-def step_batched(xp, arrs, sw: StepWeights, h, x):
+#: Bound-check slack for the tally fast path: the elementwise ``pre + b``
+#: sums round in float32, so the (float64) ``max(pre) + max(b)`` bound can
+#: undershoot an elementwise result by up to half a float32 ulp.  1e-3 at
+#: a threshold of 8.0 is ~1000x that — conservative, never unsound.
+_TALLY_SLACK = 1e-3
+
+
+def tally_step_events(events: dict, pre, z_in, ht_in,
+                      bias_ext: tuple | None = None) -> None:
+    """Accumulate numeric-health tallies from one NumPy step's already
+    materialized intermediates (see :mod:`repro.obs.numerics`).
+
+    ``act.*.idx`` counts LUT boundary hits with the float-path semantic:
+    a pre-activation at or beyond ``INPUT_MAX`` / ``INPUT_MIN`` takes the
+    ``where``-override branch in :func:`lut_eval_batched` (the qvm's
+    integer twin counts the index-clip instead — the two agree except on
+    exact-boundary ties, which the float path treats as saturated).
+    ``pre`` range is tallied as (vmin, vmax, n, n_over) against the
+    optional ``events["pre_limit"]`` amplitude so the engine can feed
+    ``NumericsMonitor.note_range`` without re-touching the values.
+
+    Fast path: the ``pre`` min/max this function needs anyway, plus the
+    precomputed bias extremes (``bias_ext = (bz_lo, bz_hi, bh_lo,
+    bh_hi)``), bound every elementwise count from above — the O(B*H)
+    comparisons only run in the rare tick whose bounds approach a
+    threshold, so a healthy monitored stream pays two reductions per
+    step and nothing else."""
+    pmin, pmax = float(pre.min()), float(pre.max())
+    if bias_ext is None:
+        bias_ext = (0.0, 0.0, 0.0, 0.0)
+        near_z = near_ht = True
+    else:
+        bz_lo, bz_hi, bh_lo, bh_hi = bias_ext
+        near_z = (pmax + bz_hi >= INPUT_MAX - _TALLY_SLACK
+                  or pmin + bz_lo <= INPUT_MIN + _TALLY_SLACK)
+        near_ht = (pmax + bh_hi >= INPUT_MAX - _TALLY_SLACK
+                   or pmin + bh_lo <= INPUT_MIN + _TALLY_SLACK)
+    if near_z:
+        events["act.z.idx"] = events.get("act.z.idx", 0) + int(
+            np.count_nonzero(z_in >= INPUT_MAX)
+            + np.count_nonzero(z_in <= INPUT_MIN))
+    if near_ht:
+        events["act.ht.idx"] = events.get("act.ht.idx", 0) + int(
+            np.count_nonzero(ht_in >= INPUT_MAX)
+            + np.count_nonzero(ht_in <= INPUT_MIN))
+    lim = events.get("pre_limit")
+    # exact comparisons on pre itself: bounds inside +-lim imply zero over
+    n_over = int(np.count_nonzero(np.abs(pre) > lim)) \
+        if lim and (pmax > lim or pmin < -lim) else 0
+    vmin, vmax, n, over = events.get("pre_range", (0.0, 0.0, 0, 0))
+    if n == 0:
+        events["pre_range"] = (pmin, pmax, int(pre.size), n_over)
+    else:
+        events["pre_range"] = (min(vmin, pmin), max(vmax, pmax),
+                               n + int(pre.size), over + n_over)
+
+
+def step_batched(xp, arrs, sw: StepWeights, h, x, events=None):
     """One batched FastGRNN step.  h: (B, H), x: (B, d) -> h_new (B, H).
 
     Mirrors ``QRuntime.step`` line for line; ``arrs`` is ``sw.arrays(xp)``.
+    ``events`` (NumPy path only — pass None under a tracer) is a mutable
+    dict that :func:`tally_step_events` fills from the intermediates this
+    call materializes anyway, so monitored and unmonitored runs execute
+    the same FP op sequence and stay byte-identical.
     """
     if sw.low_rank:
         wx = matvec_batched(xp, arrs["W1"], matvec_batched(xp, arrs["W2"].T, x))
@@ -158,8 +219,17 @@ def step_batched(xp, arrs, sw: StepWeights, h, x):
         wx = matvec_batched(xp, arrs["W"], x)
         uh = matvec_batched(xp, arrs["U"], h)
     pre = store_batched(xp, wx + uh, sw.store_scale("pre"))
-    z = lut_eval_batched(xp, arrs["sig_lut"], pre + arrs["b_z"])
-    h_tilde = lut_eval_batched(xp, arrs["tanh_lut"], pre + arrs["b_h"])
+    z_in = pre + arrs["b_z"]
+    ht_in = pre + arrs["b_h"]
+    z = lut_eval_batched(xp, arrs["sig_lut"], z_in)
+    h_tilde = lut_eval_batched(xp, arrs["tanh_lut"], ht_in)
+    if events is not None:
+        ext = events.get("_bias_ext")
+        if ext is None:
+            ext = events["_bias_ext"] = (
+                float(arrs["b_z"].min()), float(arrs["b_z"].max()),
+                float(arrs["b_h"].min()), float(arrs["b_h"].max()))
+        tally_step_events(events, pre, z_in, ht_in, ext)
     z = store_batched(xp, z, sw.store_scale("z"))
     h_tilde = store_batched(xp, h_tilde, sw.store_scale("h_tilde"))
     h_new = (sw.zeta * (1.0 - z) + sw.nu) * h_tilde + z * h

@@ -23,10 +23,13 @@ import dataclasses
 
 from .flight import DEFAULT_EVENTS_PER_SHARD, FlightRecorder
 from .invariants import (CONSERVED_SCHED, CONSERVED_WORKLOAD,
-                         assert_conservation, check_conservation)
+                         assert_conservation, check_conservation,
+                         check_numerics_conservation)
 from .metrics import (BUCKET_EDGES_US, SNAPSHOT_SCHEMA_VERSION, Counter,
                       Gauge, Histogram, MetricsRegistry,
                       merge_histogram_counts, validate_snapshot)
+from .numerics import (CELL_SITES, NumericsMonitor, RangeStats,
+                       limits_from_scales, merge_site_counts, site_order)
 from .phases import PHASES, assert_registered, registered
 from .trace import NULL_TRACER, NullTracer, Tracer
 from .transfers import TRANSFER_KEYS, TransferLedger, sum_transfers
@@ -46,6 +49,7 @@ class Observability:
     recorder: FlightRecorder | None = None
     deadline_ms: float | None = None
     debug: bool = False
+    numerics: NumericsMonitor | None = None
 
     @property
     def enabled(self) -> bool:
@@ -61,13 +65,19 @@ class Observability:
     @classmethod
     def full(cls, *, capacity: int = 4096, deadline_ms: float | None = None,
              events_per_shard: int = DEFAULT_EVENTS_PER_SHARD,
-             debug: bool = False) -> "Observability":
-        """Everything on: tracer + metrics registry + flight recorder."""
+             debug: bool = False, numerics: bool = False) -> "Observability":
+        """Everything on: tracer + metrics registry + flight recorder.
+        ``numerics=True`` additionally attaches a bare
+        :class:`~repro.obs.numerics.NumericsMonitor` (no calibration
+        limits — engines late-bind those from the artifact; build the
+        monitor via ``NumericsMonitor.from_scales`` to set them up
+        front)."""
         tracer = Tracer(capacity=capacity)
         return cls(tracer=tracer, metrics=MetricsRegistry(),
                    recorder=FlightRecorder(
                        tracer, events_per_shard=events_per_shard),
-                   deadline_ms=deadline_ms, debug=debug)
+                   deadline_ms=deadline_ms, debug=debug,
+                   numerics=NumericsMonitor() if numerics else None)
 
 
 #: The default bundle: all hooks no-ops, zero hot-path cost.
@@ -82,6 +92,9 @@ __all__ = [
     "FlightRecorder", "DEFAULT_EVENTS_PER_SHARD",
     "TransferLedger", "TRANSFER_KEYS", "sum_transfers",
     "check_conservation", "assert_conservation",
+    "check_numerics_conservation",
     "CONSERVED_WORKLOAD", "CONSERVED_SCHED",
     "PHASES", "registered", "assert_registered",
+    "NumericsMonitor", "RangeStats", "CELL_SITES", "site_order",
+    "limits_from_scales", "merge_site_counts",
 ]

@@ -45,6 +45,34 @@ def check_conservation(stats: dict) -> list[str]:
         if stats[key] != live:
             errors.append(f"{key}: gauge {stats[key]} != live sum {live} "
                           f"(gauges must not include retired shards)")
+    errors += check_numerics_conservation(stats)
+    return errors
+
+
+def check_numerics_conservation(stats: dict) -> list[str]:
+    """Numeric-health counter conservation: every per-site saturation
+    total in ``stats()["numerics"]["sites"]`` equals the sum over the
+    live shards' monitor children plus ``retired_sites`` (counts folded
+    in by ``crash_shard`` before it reset the dead shard's child).
+    No-op (empty list) when the fleet runs unmonitored."""
+    errors: list[str] = []
+    num = stats.get("numerics")
+    if num is None:
+        return errors
+    retired = num.get("retired_sites", {})
+    live: dict[str, int] = {}
+    for p in stats["per_shard"]:
+        psnap = p.get("numerics")
+        if not psnap:
+            continue
+        for k in sorted(psnap["sites"]):
+            live[k] = live.get(k, 0) + psnap["sites"][k]
+    for k in sorted(set(num["sites"]) | set(live) | set(retired)):
+        total = num["sites"].get(k, 0)
+        if total != live.get(k, 0) + retired.get(k, 0):
+            errors.append(
+                f"numerics.{k}: fleet total {total} != live "
+                f"{live.get(k, 0)} + retired {retired.get(k, 0)}")
     return errors
 
 

@@ -210,7 +210,7 @@ class MetricsRegistry:
             m = self._metrics[name]
             pname = _prom_name(name)
             if m.help:
-                lines.append(f"# HELP {pname} {m.help}")
+                lines.append(f"# HELP {pname} {_prom_help(m.help)}")
             if isinstance(m, Counter):
                 lines.append(f"# TYPE {pname} counter")
                 lines.append(f"{pname} {m.value}")
@@ -231,7 +231,19 @@ class MetricsRegistry:
 
 
 def _prom_name(name: str) -> str:
-    return "".join(c if (c.isalnum() or c in "_:") else "_" for c in name)
+    """Sanitize into the Prometheus metric-name charset
+    ``[a-zA-Z_:][a-zA-Z0-9_:]*``: every other character maps to ``_``,
+    and a leading digit gets an underscore prefix (``isalnum`` admits
+    digits everywhere *but* position 0)."""
+    out = "".join(c if (c.isalnum() and c.isascii()) or c in "_:" else "_"
+                  for c in name)
+    return "_" + out if out[:1].isdigit() else out
+
+
+def _prom_help(text: str) -> str:
+    """Escape a HELP string per the text exposition format: backslash
+    and newline are the only characters escaped on HELP lines."""
+    return text.replace("\\", "\\\\").replace("\n", "\\n")
 
 
 def _prom_num(v: float) -> str:

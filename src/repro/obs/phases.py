@@ -37,6 +37,7 @@ SCHED_PHASES = ("sched.admit", "sched.release")
 VERIFY_PHASES = (
     "verify.total", "verify.qvm", "verify.engine", "verify.qruntime_subset",
     "verify.fp32", "verify.cc_build", "verify.c_float", "verify.c_int",
+    "verify.numerics",
 )
 
 #: Every registered span phase.

@@ -58,7 +58,9 @@ import numpy as np
 
 from repro.core import quantization as q
 from repro.kernels.fastgrnn_cell.ops import Q15StreamStep
-from repro.obs import NULL_OBS, Observability, assert_conservation
+from repro.obs import (NULL_OBS, Observability, assert_conservation,
+                       merge_site_counts)
+from repro.obs.numerics import PUBLISH_EVERY
 from repro.serve.scheduler import TickReport
 from repro.serve.streaming import (StreamEvent, StreamEventBatch, StreamState,
                                    StreamingConfig, StreamingEngine,
@@ -206,6 +208,12 @@ class FleetEngine:
             "evictions", "ticks")}
         from repro.obs import TRANSFER_KEYS
         self._retired_transfers = dict.fromkeys(TRANSFER_KEYS, 0)
+        # numeric-health counters of crashed shards (site -> count): a
+        # crash folds the dying shard's monitor child in here and resets
+        # the child for the replacement engine, so live + retired stays
+        # conserved (obs.invariants.check_numerics_conservation)
+        self._retired_numerics: dict[str, int] = {}
+        self._num_pub_tick = 0
         # --- fused-tick staging (one _DeviceGroup per device) ----------
         # One (sum S_i, ...) buffer per kernel operand per group, with
         # each shard's segment handed out as a view: phase-1 ring gathers
@@ -317,6 +325,16 @@ class FleetEngine:
             if delta:
                 c.inc(delta)
         self._last_transfers = cur
+        mon = self.obs.numerics
+        if mon is not None:
+            # parent publish aggregates every shard child (delta-tracked);
+            # shard engines skip their own publish when fleet-owned.
+            # Throttled like the standalone engine: the export walk is
+            # the expensive part, and deltas survive the wait.
+            self._num_pub_tick += 1
+            if self._num_pub_tick >= PUBLISH_EVERY:
+                self._num_pub_tick = 0
+                mon.publish(self.obs.metrics)
 
     def _note_shard_events(self, shard: int, evs: list) -> None:
         """Feed the flight recorder one shard's tick emission as compact
@@ -767,6 +785,17 @@ class FleetEngine:
         if not (0 <= shard < len(self.shards)):
             raise ValueError(f"no such shard: {shard}")
         old = self.shards[shard]
+        num_crash = None
+        mon = self.obs.numerics
+        if mon is not None:
+            # the dying shard's numeric-health child: fold its counters
+            # into the retired accumulator and reset it — the replacement
+            # engine resolves the SAME child (same shard index) and must
+            # start from zero for conservation to hold
+            child = mon.shard(shard)
+            num_crash = child.snapshot()
+            merge_site_counts(self._retired_numerics, num_crash["sites"])
+            child.reset()
         self._retire(old.stats())
         victims = [sid for sid, o in self._owner.items()
                    if o == shard and sid in self._journal]
@@ -810,12 +839,19 @@ class FleetEngine:
         if self.obs.recorder is not None:
             # the black box: dump the tracer's pre-crash span ring plus
             # the last events each shard emitted, as a typed artifact
+            counters = {"ticks": self._ticks,
+                        "failovers": self._failovers,
+                        "migrations": self._migrations,
+                        "global_spills": self._global_spills}
+            if num_crash is not None:
+                # black-box numeric health at the moment of death: the
+                # dead shard's own sites/drift, plus what was already
+                # retired fleet-wide (deterministic snapshot — no clocks)
+                counters["numerics"] = num_crash
+                counters["retired_numerics"] = dict(sorted(
+                    self._retired_numerics.items()))
             self.obs.recorder.record_crash(
-                report, tick=self._ticks,
-                counters={"ticks": self._ticks,
-                          "failovers": self._failovers,
-                          "migrations": self._migrations,
-                          "global_spills": self._global_spills})
+                report, tick=self._ticks, counters=counters)
         return report
 
     def _fire(self, phase: str) -> list[int]:
@@ -970,6 +1006,7 @@ class FleetEngine:
             },
             "retired": {**self._retired,
                         "scheduler": dict(self._retired_sched)},
+            **self._numerics_stats(),
             "scheduler": {
                 "max_slots": slots,
                 "active": sched_tot["active"],
@@ -985,6 +1022,23 @@ class FleetEngine:
         if self.obs.debug:
             assert_conservation(out)
         return out
+
+    def _numerics_stats(self) -> dict[str, Any]:
+        """The fleet's numeric-health stats block (empty when monitoring
+        is off).  ``sites`` totals = live shard children + retired crashed
+        shards, so conservation holds across crash/rebuild lifecycles
+        (``obs.invariants.check_numerics_conservation``)."""
+        mon = self.obs.numerics
+        if mon is None:
+            return {}
+        snap = mon.snapshot(per_shard=True)
+        totals = merge_site_counts(dict(snap["sites"]),
+                                   self._retired_numerics)
+        snap["sites"] = {k: totals[k] for k in sorted(totals)}
+        snap["retired_sites"] = {
+            k: self._retired_numerics[k]
+            for k in sorted(self._retired_numerics)}
+        return {"numerics": snap}
 
     # ------------------------------------------------------------------
     # Internals

@@ -61,6 +61,7 @@ from repro.compress.artifact import ModelArtifact
 from repro.core import quantization as q
 from repro.kernels.fastgrnn_cell.ops import Q15StreamStep
 from repro.obs import NULL_OBS, Observability
+from repro.obs.numerics import PUBLISH_EVERY
 from repro.serve.scheduler import HostProgram, SlotScheduler, TickReport
 
 
@@ -220,6 +221,13 @@ class StreamingEngine:
         self._tracer = self._obs.tracer
         self._obs_shard = -1        # fleet shard index tag (set by owner)
         self._last_advanced = 0
+        # numeric-health seam (repro.obs.numerics): resolved lazily via
+        # _numerics() because the fleet tags _obs_shard after construction;
+        # the kernel-side event dict is engine-owned and flushed per tick
+        self._num_cache: tuple[int, Any] | None = None
+        self._num_events: dict[str, Any] = {}
+        self._num_tallied = False
+        self._num_pub_tick = 0
         self.kernel = Q15StreamStep(self.qp, act_scales=act_scales,
                                     naive_acts=naive_acts,
                                     backend=config.backend,
@@ -296,10 +304,19 @@ class StreamingEngine:
         default is the deployed configuration (FP32 acts, bit-identical to
         ``QRuntime.from_artifact``); ``quantized_acts=True`` selects the
         Table V calibrated-Q15-activation mode via
-        ``ModelArtifact.runtime_scales`` (the gate shared with QRuntime)."""
-        return cls(artifact, config,
-                   act_scales=artifact.runtime_scales(quantized_acts),
-                   naive_acts=naive_acts, obs=obs)
+        ``ModelArtifact.runtime_scales`` (the gate shared with QRuntime).
+        When the bundle carries a :class:`~repro.obs.numerics.NumericsMonitor`,
+        the artifact's deploy calibration scales are late-bound into it as
+        per-tensor drift limits."""
+        eng = cls(artifact, config,
+                  act_scales=artifact.runtime_scales(quantized_acts),
+                  naive_acts=naive_acts, obs=obs)
+        if obs is not None and obs.numerics is not None \
+                and artifact.act_scales:
+            from repro.obs.numerics import limits_from_scales
+            obs.numerics.set_default_limits(
+                limits_from_scales(artifact.act_scales))
+        return eng
 
     # ------------------------------------------------------------------
     # Session lifecycle
@@ -479,6 +496,19 @@ class StreamingEngine:
             reg.counter("engine.deadline_miss_stream_ticks",
                         "stream-steps advanced in ticks that missed "
                         "the deadline", wallclock=True).inc(advanced)
+        mon = self._numerics()
+        if mon is not None and self._obs_shard < 0:
+            # standalone engines publish their own (-1) child; a fleet
+            # shard's counts are published by the fleet front door instead
+            # (publishing both would double-count into the same registry).
+            # Publish on a cadence, not per tick: the export walks every
+            # site/tensor and recomputes drift, which dominates monitor
+            # cost on small models; counters are delta-tracked so a
+            # throttled publish loses nothing.
+            self._num_pub_tick += 1
+            if self._num_pub_tick >= PUBLISH_EVERY:
+                self._num_pub_tick = 0
+                mon.publish(reg)
 
     def drain(self) -> list[StreamEvent]:
         """Tick until no resident or pending stream can advance (buffers
@@ -546,11 +576,44 @@ class StreamingEngine:
         while s.chunks:
             self._ring_write(slot, s.chunks.popleft())
 
+    def _numerics(self):
+        """This engine's numeric-health monitor — the shard child of the
+        bundle's :class:`~repro.obs.numerics.NumericsMonitor` (resolved
+        lazily and cached: the fleet tags ``_obs_shard`` after
+        construction; -1 = standalone).  None when monitoring is off,
+        which keeps every numerics hook a dead branch."""
+        mon = self._obs.numerics
+        if mon is None:
+            return None
+        cache = self._num_cache
+        if cache is not None and cache[0] == self._obs_shard:
+            return cache[1]
+        child = mon.shard(self._obs_shard)
+        child.declare(("act.z.idx", "act.ht.idx"))
+        self._num_cache = (self._obs_shard, child)
+        return child
+
+    def _flush_numeric_events(self, mon) -> None:
+        """Fold the kernel-side event dict (filled by
+        ``qstep.tally_step_events``) into the monitor, once per tick."""
+        ev = self._num_events
+        counts = {}
+        for k in ("act.z.idx", "act.ht.idx"):
+            n = ev.pop(k, 0)
+            if n:
+                counts[k] = n
+        if counts:
+            mon.count_events(counts)
+        pr = ev.pop("pre_range", None)
+        if pr is not None:
+            mon.note_range("pre", pr[0], pr[1], pr[2], pr[3])
+
     def _advance(self, resident: np.ndarray) -> TickReport:
         handle = self._advance_begin(resident)
         if handle is None:
             return TickReport()
         avail, rows = handle
+        mon = self._numerics()
         tr = self._tracer
         t0 = tr.t()
         if self._device_resident:
@@ -558,11 +621,26 @@ class StreamingEngine:
             # output is adopted immediately — emission/tap row pulls
             # (and the staging sync at the top of the NEXT
             # _advance_begin) are the only places the host waits on it.
+            # Per-tick numeric tallies are skipped on the resident path
+            # (a host recompute would defeat the zero-h-copy contract);
+            # emission-row drift telemetry still applies.
             h_new = self.kernel.step_resident(self._resolve_h(), self._x,
                                               avail)
             self._h_inflight = True
         else:
+            if mon is not None:
+                self.kernel.numeric_events = self._num_events
+                if self.config.backend != "exact":
+                    # jit/pallas: the accelerated dispatch is never
+                    # touched (byte-identity by construction) — recompute
+                    # the advanced rows on the host NumPy path to observe
+                    # their intermediates
+                    self.kernel.tally_numeric_events(self._h, self._x, rows)
             h_new = self.kernel.step_rows(self._h, self._x, avail, rows)
+            if mon is not None:
+                self.kernel.numeric_events = None
+                self._flush_numeric_events(mon)
+                self._num_tallied = True
         tr.rec("engine.kernel", t0, self._obs_shard)
         return self._advance_finish(handle, h_new)
 
@@ -602,6 +680,23 @@ class StreamingEngine:
             x[:] = 0.0
             x[rows] = self._ring[heads % self._cap, rows]
         self._tracer.rec("engine.gather", t0, self._obs_shard)
+        mon = self._numerics()
+        self._num_tallied = False
+        if mon is not None:
+            # input-range telemetry from the already-gathered staging slab
+            # (runs on both the standalone _advance path and the fleet's
+            # fused tick, which calls the begin/finish halves directly)
+            xv = x[rows]
+            xl = mon.limit("x")
+            xmin, xmax = float(xv.min()), float(xv.max())
+            # min/max bound the elementwise scan: only count when the
+            # slab actually crosses the calibration amplitude
+            n_over = int(np.count_nonzero(np.abs(xv) > xl)) \
+                if xl and (xmax > xl or xmin < -xl) else 0
+            mon.note_range("x", xmin, xmax, int(xv.size), n_over)
+            lim = mon.limit("pre")
+            if lim:
+                self._num_events["pre_limit"] = lim
         return (avail, rows)
 
     def _advance_finish(self, handle, h_new: np.ndarray) -> TickReport:
@@ -611,6 +706,19 @@ class StreamingEngine:
         avail, rows = handle
         t_fin = self._tracer.t()
         self._last_advanced = int(rows.size)
+        mon = self._numerics()
+        if mon is not None and not self._num_tallied \
+                and not self._device_resident:
+            # fused fleet tick: the group kernel stepped a cross-shard
+            # batch, so per-shard attribution needs a host recompute of
+            # this shard's advanced rows from its pre-step state (self._h
+            # is still pre-step here).  Monitoring a fused fleet pays
+            # this recompute; it defaults off.
+            self.kernel.numeric_events = self._num_events
+            self.kernel.tally_numeric_events(self._h, self._x, rows)
+            self.kernel.numeric_events = None
+            self._flush_numeric_events(mon)
+            self._num_tallied = True
         if h_new is not None:
             self._h = h_new
             self._h_pending = None
@@ -652,7 +760,13 @@ class StreamingEngine:
                 self._steps[emit_rows] > self._suppress[emit_rows]]
             self._replay_suppressed += int(emit_rows.size - deliver.size)
             if deliver.size:
-                logits = self.kernel.head_logits(self._h_rows(deliver))
+                h_emit = self._h_rows(deliver)
+                logits = self.kernel.head_logits(h_emit)
+                mon = self._numerics()
+                if mon is not None:
+                    # full-histogram drift stats on the rare emission path
+                    mon.observe("h", h_emit)
+                    mon.observe("logits", logits)
                 if self.config.batch_events:
                     events.append(self._event_batch(deliver, at_window,
                                                     logits))
@@ -879,7 +993,10 @@ class StreamingEngine:
 
     def stats(self) -> dict[str, Any]:
         sched = self._sched.stats()
+        mon = self._numerics()
+        extra = {} if mon is None else {"numerics": mon.snapshot()}
         return {
+            **extra,
             "backend": self.config.backend,
             "device_resident": self._device_resident,
             "transfers": self.kernel.transfers.snapshot(),

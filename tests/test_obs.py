@@ -246,6 +246,52 @@ def test_prometheus_exposition_format():
     assert cums == sorted(cums)
 
 
+def test_prometheus_exposition_conformance():
+    """Exporter conformance beyond the happy path: metric names must
+    match ``[a-zA-Z_:][a-zA-Z0-9_:]*``, HELP text must escape backslash
+    and newline, and output ordering must be stable (sorted by source
+    name) so scrapes diff cleanly."""
+    import re
+    reg = MetricsRegistry()
+    reg.counter("50hz.deadline-miss", "misses @ 50Hz").inc(1)
+    reg.gauge("numerics.drift.h", 'help with \\ backslash\nand newline')
+    reg.counter("fleet.shard0.ticks", "plain").inc(2)
+    reg.gauge("weird~name!", "").set(1.0)
+    text = reg.prometheus()
+    name_re = re.compile(r"[a-zA-Z_:][a-zA-Z0-9_:]*$")
+    for line in text.splitlines():
+        if line.startswith("# HELP ") or line.startswith("# TYPE "):
+            name = line.split(" ", 3)[2]
+        else:
+            name = line.split("{", 1)[0].split(" ", 1)[0]
+        assert name_re.match(name), f"bad metric name {name!r} in {line!r}"
+    # leading digit gets a prefix instead of producing an invalid name
+    assert "_50hz_deadline_miss 1" in text
+    # HELP payload is single-line with escaped backslash / newline
+    help_line = next(l for l in text.splitlines()
+                     if l.startswith("# HELP numerics_drift_h"))
+    assert help_line == \
+        "# HELP numerics_drift_h help with \\\\ backslash\\nand newline"
+    # stable ordering: families appear in sorted source-name order
+    fams = [l.split(" ", 3)[2] for l in text.splitlines()
+            if l.startswith("# TYPE ")]
+    assert fams == [_prom_name_ref(n) for n in sorted(
+        ("50hz.deadline-miss", "numerics.drift.h", "fleet.shard0.ticks",
+         "weird~name!"))]
+    # two identical registries render byte-identically
+    reg2 = MetricsRegistry()
+    reg2.counter("50hz.deadline-miss", "misses @ 50Hz").inc(1)
+    reg2.gauge("numerics.drift.h", 'help with \\ backslash\nand newline')
+    reg2.counter("fleet.shard0.ticks", "plain").inc(2)
+    reg2.gauge("weird~name!", "").set(1.0)
+    assert reg2.prometheus() == text
+
+
+def _prom_name_ref(name: str) -> str:
+    from repro.obs.metrics import _prom_name
+    return _prom_name(name)
+
+
 def test_merge_histogram_counts():
     a, b = Histogram("a"), Histogram("b")
     a.observe_many_us(np.array([1.0, 5.0]))
